@@ -1,0 +1,80 @@
+"""Collect the full CNN profiling dataset (paper §5.1/§6) into the on-disk
+cache.  Long-running; intended to be launched once in the background:
+
+    PYTHONPATH=src python -m benchmarks.collect_cnn_data
+
+Every datapoint is cached in ``benchmarks/cache/cnn_profile.json`` so the
+collection is resumable and all paper-table benchmarks afterwards run from
+cache.  Grid layout (reduced CPU-host grid; ``--full`` restores the paper
+grid — see DESIGN.md §5):
+
+  fig3   : resnet18, mobilenetv2, squeezenet, mnasnet
+           train  = random strategy, levels {0,30,50,70,90}%
+           test   = random + L1 strategies, levels {10,40,60,80}%
+  fig4   : + resnet50, googlenet test grids (basis generalisation)
+  §6.1   : alexnet, all 19 levels (training-set-size sweep)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.dataset import (
+    DEFAULT_BATCH_SIZES,
+    DEFAULT_TEST_LEVELS,
+    DEFAULT_TRAIN_LEVELS,
+    PAPER_ALL_LEVELS,
+    DatasetCache,
+    GridSpec,
+    collect_grid,
+)
+
+CACHE_PATH = "benchmarks/cache/cnn_profile.json"
+
+FIG3_FAMILIES = ("resnet18", "mobilenetv2", "squeezenet", "mnasnet")
+FIG4_EXTRA_FAMILIES = ("resnet50", "googlenet")
+
+
+def all_grids(full: bool = False) -> list[GridSpec]:
+    bss = DEFAULT_BATCH_SIZES
+    train_l, test_l = DEFAULT_TRAIN_LEVELS, DEFAULT_TEST_LEVELS
+    grids: list[GridSpec] = []
+    for fam in FIG3_FAMILIES:
+        grids.append(GridSpec(fam, train_l, "random", bss))
+        grids.append(GridSpec(fam, test_l, "random", bss))
+        grids.append(GridSpec(fam, test_l, "l1", bss))
+    for fam in FIG4_EXTRA_FAMILIES:
+        grids.append(GridSpec(fam, test_l, "random", bss))
+        grids.append(GridSpec(fam, test_l, "l1", bss))
+    # §6.2.1 DNNMem comparison trains a same-network Γ model on ResNet50.
+    grids.append(GridSpec("resnet50", train_l, "random", bss))
+    # §6.1 training-set-size sweep: AlexNet across all 19 paper levels.
+    grids.append(GridSpec("alexnet", PAPER_ALL_LEVELS, "random", bss))
+    return grids
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-size grid")
+    ap.add_argument("--cache", default=CACHE_PATH)
+    args = ap.parse_args()
+
+    cache = DatasetCache(args.cache)
+    grids = all_grids(args.full)
+    total_pts = sum(len(g.levels) * len(g.batch_sizes) for g in grids)
+    print(f"collecting {total_pts} datapoints across {len(grids)} grids "
+          f"({len(cache)} already cached)", flush=True)
+    t0 = time.time()
+    done = 0
+    for g in grids:
+        print(f"[{time.time() - t0:7.1f}s] grid {g.family}/{g.strategy}/"
+              f"levels={[round(l, 2) for l in g.levels]}", flush=True)
+        collect_grid(g, cache, verbose=True)
+        done += len(g.levels) * len(g.batch_sizes)
+        print(f"[{time.time() - t0:7.1f}s] {done}/{total_pts} points done", flush=True)
+    print(f"ALL DONE in {time.time() - t0:.0f}s — cache has {len(cache)} points", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared helpers for the paper-table benchmarks (cache IO, fitting,
+error reporting)."""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.dataset import (
+    DEFAULT_BATCH_SIZES,
+    DEFAULT_TEST_LEVELS,
+    DEFAULT_TRAIN_LEVELS,
+    DatasetCache,
+    Datapoint,
+    GridSpec,
+    collect_grid,
+)
+from repro.core.predictor import Perf4Sight
+
+CACHE_PATH = os.path.join(os.path.dirname(__file__), "cache", "cnn_profile.json")
+DRYRUN_PATH = os.path.join(os.path.dirname(__file__), "cache", "dryrun.jsonl")
+
+
+def cache() -> DatasetCache:
+    return DatasetCache(CACHE_PATH)
+
+
+def grid_points(c: DatasetCache, family: str, levels, strategy: str,
+                batch_sizes=DEFAULT_BATCH_SIZES, *, collect_missing: bool = True,
+                ) -> list[Datapoint]:
+    """Fetch (or lazily profile) the datapoints of one grid."""
+    spec = GridSpec(family, tuple(levels), strategy, tuple(batch_sizes))
+    return collect_grid(spec, c, verbose=False) if collect_missing else [
+        d for d in (c.get(Datapoint(
+            family=family, level=l, strategy=strategy, bs=b,
+            width_mult=spec.width_mult, input_hw=spec.input_hw, seed=spec.seed,
+            gamma_mb=0, phi_ms=0).key) for l in levels for b in batch_sizes)
+        if d is not None
+    ]
+
+
+def fit_predictor(train_dps, seed=0, n_estimators=100) -> Perf4Sight:
+    return Perf4Sight(n_estimators=n_estimators, seed=seed).fit(train_dps)
+
+
+def csv_line(name: str, value: float, derived: str = "") -> str:
+    return f"{name},{value:.6g},{derived}"

@@ -1,0 +1,41 @@
+"""Fig. 4 reproduction: training on a *basis* of networks (ResNet18,
+MobileNetV2, SqueezeNet), predicting for networks not in the basis
+(ResNet50, MnasNet, GoogLeNet) as well as the basis networks themselves.
+
+Paper finding: basis networks stay close to Fig. 3 error; unseen networks
+degrade by +5.6 pp (ResNet50), +2.55 pp (MnasNet), +16 pp (GoogLeNet) —
+sharing building blocks with the basis is what matters (App. C)."""
+
+from __future__ import annotations
+
+from repro.core.dataset import DEFAULT_TEST_LEVELS, DEFAULT_TRAIN_LEVELS
+
+from .common import cache, csv_line, fit_predictor, grid_points
+
+BASIS = ("resnet18", "mobilenetv2", "squeezenet")
+UNSEEN = ("mnasnet", "resnet50", "googlenet")
+
+
+def run(print_fn=print) -> dict:
+    c = cache()
+    train = []
+    for net in BASIS:
+        train += grid_points(c, net, DEFAULT_TRAIN_LEVELS, "random")
+    model = fit_predictor(train)
+    results = {}
+    for net in BASIS + UNSEEN:
+        for strat in ("random", "l1"):
+            test = grid_points(c, net, DEFAULT_TEST_LEVELS, strat)
+            rep = model.evaluate(test)
+            tag = "Rand" if strat == "random" else "L1"
+            kind = "basis" if net in BASIS else "unseen"
+            results[(net, tag)] = rep
+            print_fn(csv_line(f"fig4/{net}/{tag}/gamma_err_pct",
+                              rep.gamma_mape * 100, kind))
+            print_fn(csv_line(f"fig4/{net}/{tag}/phi_err_pct",
+                              rep.phi_mape * 100, kind))
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks: static roofline stats per Pallas kernel config
+(FLOPs, HBM bytes, arithmetic intensity, VMEM working set) plus CPU oracle
+wall-time as a correctness-path sanity check.
+
+Wall-clock of interpret-mode Pallas is meaningless (Python interpreter), so
+the perf numbers reported are the *structural* ones the TPU roofline uses."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssm_scan.ref import ssd_ref
+from repro.kernels.conv_mm.ref import conv_ref
+from repro.launch.mesh import TPU_V5E
+
+from .common import csv_line
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # compile
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def run(print_fn=print) -> None:
+    peak, bw = TPU_V5E["peak_flops_bf16"], TPU_V5E["hbm_bw"]
+
+    # flash attention: (B,H,S,Dh) production-ish tile
+    B, H, S, Dh, bq, bk = 1, 8, 2048, 128, 512, 512
+    flops = 4.0 * B * H * S * S * Dh * 0.5  # causal
+    bytes_ = 2.0 * (B * H * S * Dh * 3 + B * H * S * Dh)
+    vmem = (bq * Dh + 2 * bk * Dh) * 2 + bq * Dh * 4
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, H, S, Dh)), jnp.bfloat16)
+    us = _time(jax.jit(lambda q: attention_ref(q, q, q, causal=True)), q)
+    print_fn(csv_line("kernel/flash_attn/ref_us", us,
+                      f"AI={flops / bytes_:.0f} tpu_roofline_us="
+                      f"{max(flops / peak, bytes_ / bw) * 1e6:.1f} vmem_kb={vmem / 1024:.0f}"))
+
+    # conv_mm: ResNet-ish layer
+    N, HW, C, K, O = 8, 32, 128, 3, 128
+    flops = 2.0 * N * HW * HW * O * K * K * C
+    bytes_ = 2.0 * (N * HW * HW * C + K * K * C * O + N * HW * HW * O)
+    x = jnp.asarray(rng.standard_normal((N, HW, HW, C)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((K, K, C, O)), jnp.bfloat16)
+    us = _time(jax.jit(lambda x, w: conv_ref(x, w, stride=1, padding=1)), x, w)
+    print_fn(csv_line("kernel/conv_mm/ref_us", us,
+                      f"AI={flops / bytes_:.0f} tpu_roofline_us="
+                      f"{max(flops / peak, bytes_ / bw) * 1e6:.1f}"))
+
+    # ssd: mamba2-780m layer tile
+    B2, S2, Hh, P, Nst, ch = 1, 2048, 24, 64, 128, 128
+    flops = 2.0 * B2 * S2 * ch * Hh * (Nst + P) + 2.0 * B2 * S2 * Hh * P * Nst
+    bytes_ = 2.0 * B2 * S2 * Hh * P * 2 + 4.0 * B2 * S2 * Hh
+    xh = jnp.asarray(rng.standard_normal((B2, S2, Hh, P)), jnp.float32)
+    a = -jnp.abs(jnp.asarray(rng.standard_normal((B2, S2, Hh)), jnp.float32)) * 0.1
+    Bm = jnp.asarray(rng.standard_normal((B2, S2, Nst)), jnp.float32)
+    us = _time(jax.jit(lambda xh, a, Bm: ssd_ref(xh, a, Bm, Bm, chunk=ch)[0]),
+               xh, a, Bm)
+    print_fn(csv_line("kernel/ssd/ref_us", us,
+                      f"AI={flops / bytes_:.0f} tpu_roofline_us="
+                      f"{max(flops / peak, bytes_ / bw) * 1e6:.1f}"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""§6.4 in miniature: evolutionary search for the largest sub-network that
+fits hard (Γ, γ, φ) budgets, gated by the perf4sight predictors — then a
+ground-truth profile of the winner to verify the constraints held.
+
+    PYTHONPATH=src python examples/config_search.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.dataset import DatasetCache, GridSpec, collect_grid
+from repro.core.features import network_features
+from repro.core.predictor import Perf4Sight
+from repro.core.profiler import profile_inference, profile_training
+from repro.core.search import Constraints, evolutionary_search, sample_subnetwork
+from repro.models.cnn import build_resnet50
+
+WM, HW = 0.25, 16
+
+
+def main() -> None:
+    cache = DatasetCache("benchmarks/cache/cnn_profile.json")
+    print("training-Γ model from the ResNet50 grid...")
+    train_pts = collect_grid(
+        GridSpec("resnet50", (0.0, 0.3, 0.5, 0.7, 0.9), "random", (2, 8, 16, 32)),
+        cache, verbose=True)
+    cache.flush()
+    gamma_model = Perf4Sight(n_estimators=80).fit(train_pts)
+
+    print("γ/φ inference models from sampled sub-networks...")
+    base = build_resnet50(width_mult=WM, input_hw=HW)
+    X, g, p = [], [], []
+    for i in range(8):
+        rng = np.random.default_rng(100 + i)
+        m = build_resnet50(widths=sample_subnetwork(base.widths, rng), input_hw=HW)
+        spec = m.conv_specs()
+        for bs in (1, 4):
+            r = profile_inference(m, bs)
+            X.append(network_features(spec, bs))
+            g.append(r.gamma_mb)
+            p.append(r.phi_ms)
+    infer_model = Perf4Sight(n_estimators=80).fit_arrays(
+        np.array(X), np.array(g), np.array(p))
+
+    cons = Constraints(gamma_mb=15.0, gamma_inf_mb=5.0, phi_inf_ms=15.0,
+                       train_bs=16, infer_bs=1)
+    print(f"searching under Γ≤{cons.gamma_mb}MB γ≤{cons.gamma_inf_mb}MB "
+          f"φ≤{cons.phi_inf_ms}ms ...")
+    t0 = time.time()
+    r = evolutionary_search("resnet50", gamma_model, infer_model, cons,
+                            population=32, iterations=30,
+                            width_mult=WM, input_hw=HW)
+    print(f"  {r.evaluations} candidates in {time.time() - t0:.1f}s "
+          f"({r.evaluations / (time.time() - t0):.0f} evals/s)")
+    print(f"  best: {int(r.fitness)} filters kept, predicted "
+          f"Γ={r.gamma_mb:.1f}MB γ={r.gamma_inf_mb:.1f}MB φ={r.phi_inf_ms:.1f}ms")
+
+    print("verifying the winner against ground truth...")
+    m = build_resnet50(widths=r.widths, input_hw=HW)
+    t = profile_training(m, cons.train_bs)
+    inf = profile_inference(m, cons.infer_bs)
+    print(f"  measured Γ={t.gamma_mb:.1f}MB γ={inf.gamma_mb:.1f}MB "
+          f"φ={inf.phi_ms:.1f}ms")
+    ok = (t.gamma_mb <= cons.gamma_mb * 1.2
+          and inf.gamma_mb <= cons.gamma_inf_mb * 1.2
+          and inf.phi_ms <= cons.phi_inf_ms * 1.5)
+    print("  constraints", "HELD" if ok else "VIOLATED (prediction error)")
+
+
+if __name__ == "__main__":
+    main()

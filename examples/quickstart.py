@@ -1,0 +1,56 @@
+"""Quickstart: the full perf4sight loop in one script (~2 min on CPU).
+
+1. Profile a small grid of pruned SqueezeNet topologies (network-wise
+   strategy: whole training steps, §5.1).
+2. Extract the 42 analytical features per (topology, batch size) (§5.2.1).
+3. Fit the Γ/Φ random forests (§5.2).
+4. Predict memory/latency for an unseen topology and check against a real
+   profile; use the predictor as an admission gate (§6.4).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.dataset import DatasetCache, GridSpec, collect_grid
+from repro.core.predictor import Perf4Sight
+from repro.core.profiler import profile_training
+from repro.core.pruning import pruned_model
+from repro.core.features import network_features
+
+
+def main() -> None:
+    cache = DatasetCache("benchmarks/cache/cnn_profile.json")
+
+    print("1) profiling pruned SqueezeNet training steps (cache-aware)...")
+    grid = GridSpec("squeezenet", levels=(0.0, 0.3, 0.5, 0.7, 0.9),
+                    strategy="random", batch_sizes=(2, 8, 16, 32))
+    train_pts = collect_grid(grid, cache, verbose=True)
+    cache.flush()
+
+    print("\n2-3) fitting Γ/Φ random forests on", len(train_pts), "points...")
+    model = Perf4Sight(n_estimators=100).fit(train_pts)
+    print(f"   OOB: Γ {model.gamma_model.oob_mape_ * 100:.1f}% "
+          f"Φ {model.phi_model.oob_mape_ * 100:.1f}%")
+
+    print("\n4) predicting an UNSEEN topology (40% pruned)...")
+    m = pruned_model("squeezenet", 0.4, "random", seed=7,
+                     width_mult=0.25, input_hw=16)
+    spec = m.conv_specs()
+    for bs in (4, 24):
+        pg, pp = model.predict(spec, bs)
+        real = profile_training(m, bs)
+        print(f"   bs={bs:3d}: predicted Γ={pg:6.1f}MB Φ={pp:6.1f}ms | "
+              f"measured Γ={real.gamma_mb:6.1f}MB Φ={real.phi_ms:6.1f}ms | "
+              f"err Γ={abs(pg - real.gamma_mb) / real.gamma_mb * 100:4.1f}% "
+              f"Φ={abs(pp - real.phi_ms) / real.phi_ms * 100:4.1f}%")
+
+    print("\n5) admission gate (the launcher's safety check):")
+    ok, info = model.admit(spec, 32, gamma_budget_mb=50.0)
+    print(f"   bs=32 under 50MB budget → {'ADMIT' if ok else 'REFUSE'} ({info})")
+    ok, info = model.admit(spec, 32, gamma_budget_mb=1.0)
+    print(f"   bs=32 under  1MB budget → {'ADMIT' if ok else 'REFUSE'} ({info})")
+
+
+if __name__ == "__main__":
+    main()

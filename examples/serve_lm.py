@@ -1,0 +1,40 @@
+"""Batched serving example: prefill + KV-cache decode with the ServeEngine
+on a smoke-scale qwen3-family model.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.serve.engine import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    cfg = get_config("qwen3-4b", reduced=True)
+    print(f"serving {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    params = T.init_params(cfg, 0)
+    engine = ServeEngine(cfg, params,
+                         ServeConfig(max_len=128, n_slots=4, temperature=0.0))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(2, cfg.vocab, (4, 16)).astype(np.int32)
+    t0 = time.time()
+    out = engine.generate(prompts, max_new_tokens=24)
+    dt = time.time() - t0
+    toks = out["tokens"]
+    print(f"generated {toks.shape} tokens in {dt:.2f}s "
+          f"({toks.size / dt:.0f} tok/s on CPU)")
+    for i, row in enumerate(toks):
+        print(f"  seq {i}: {row[:12].tolist()}...")
+    # decode batch 2 again — greedy determinism
+    out2 = engine.generate(prompts, max_new_tokens=24)
+    assert np.array_equal(out["tokens"], out2["tokens"])
+    print("greedy decode is deterministic ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+CPU with the full production loop — checkpointing, auto-resume, straggler
+monitoring, cosine schedule, gradient clipping.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.optim.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+# ~100M params: 12L, d=512, 8H, ff=2048, 32k vocab
+CFG_100M = ArchConfig(
+    name="lm-100m", family="dense", n_layers=12, d_model=512, n_heads=8,
+    n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32_000, qk_norm=True,
+    rope_theta=1e4, tie_embeddings=True,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    print(f"model: {CFG_100M.param_count() / 1e6:.0f}M params")
+    shape = ShapeSpec("train", args.seq, args.batch, "train")
+    opt = OptimizerConfig(kind="adamw", lr=1e-3, warmup_steps=20,
+                          total_steps=args.steps, clip_norm=1.0)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10)
+    trainer = Trainer(CFG_100M, shape, opt, tcfg)
+    out = trainer.train(args.steps)
+    h = out["history"]
+    for rec in h[:: max(len(h) // 20, 1)]:
+        print(f"  step {rec['step']:4d}  loss {rec['loss']:.4f}  "
+              f"ce {rec['ce']:.4f}  {rec['dt'] * 1e3:6.1f} ms"
+              f"{'  [STRAGGLER]' if rec['straggler'] else ''}")
+    first = np.mean([r["ce"] for r in h[:10]])
+    last = np.mean([r["ce"] for r in h[-10:]])
+    print(f"\nce: {first:.3f} → {last:.3f}  "
+          f"({len(out['stragglers'])} straggler steps flagged)")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

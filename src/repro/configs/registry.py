@@ -1,0 +1,53 @@
+"""Registry of assigned architectures (``--arch <id>``)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+
+__all__ = ["ARCH_IDS", "get_config", "get_shape", "all_cells"]
+
+_MODULES = {
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "llama4-scout-17b-a16e": "repro.configs.llama4_scout_17b_a16e",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> ArchConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list(_MODULES)}")
+    cfg = importlib.import_module(_MODULES[arch]).CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch × shape) is runnable; reason when skipped (DESIGN §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """All 40 (arch × shape) cells with their supported/skip status."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, why = cell_supported(cfg, shape)
+            out.append((arch, shape_name, ok, why))
+    return out

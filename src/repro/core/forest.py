@@ -1,0 +1,140 @@
+"""Random forest regressor (paper §5.2, citing Breiman 2001).
+
+Bootstrap-aggregated :class:`~repro.core.tree.RegressionTree`s with per-node
+feature subsampling, out-of-bag (OOB) error estimation and aggregated feature
+importances.  One forest is trained per modelled attribute (Γ memory,
+Φ latency) — paper §5.3.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .tree import RegressionTree
+
+__all__ = ["RandomForestRegressor"]
+
+
+class RandomForestRegressor:
+    def __init__(
+        self,
+        n_estimators: int = 100,
+        max_depth: int | None = None,
+        min_samples_leaf: int = 1,
+        min_samples_split: int = 2,
+        max_features: int | float | str | None = "third",
+        bootstrap: bool = True,
+        seed: int = 0,
+    ):
+        self.n_estimators = int(n_estimators)
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.min_samples_split = min_samples_split
+        self.max_features = max_features
+        self.bootstrap = bootstrap
+        self.seed = seed
+        self.trees_: list[RegressionTree] = []
+        self.oob_prediction_: np.ndarray | None = None
+        self.oob_mape_: float | None = None
+        self.feature_importances_: np.ndarray | None = None
+        self._y_min: float | None = None
+        self._y_max: float | None = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "RandomForestRegressor":
+        X = np.asarray(X, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        n = len(y)
+        if n == 0:
+            raise ValueError("empty training set")
+        root = np.random.default_rng(self.seed)
+        self.trees_ = []
+        oob_sum = np.zeros(n)
+        oob_cnt = np.zeros(n)
+        importances = np.zeros(X.shape[1])
+        for t in range(self.n_estimators):
+            rng = np.random.default_rng(root.integers(2**63))
+            if self.bootstrap:
+                idx = rng.integers(0, n, size=n)
+            else:
+                idx = np.arange(n)
+            tree = RegressionTree(
+                max_depth=self.max_depth,
+                min_samples_leaf=self.min_samples_leaf,
+                min_samples_split=self.min_samples_split,
+                max_features=self.max_features,
+                rng=rng,
+            ).fit(X[idx], y[idx])
+            self.trees_.append(tree)
+            importances += tree.feature_importances_
+            if self.bootstrap:
+                oob_mask = np.ones(n, dtype=bool)
+                oob_mask[np.unique(idx)] = False
+                if oob_mask.any():
+                    oob_sum[oob_mask] += tree.predict(X[oob_mask])
+                    oob_cnt[oob_mask] += 1
+        total = importances.sum()
+        self.feature_importances_ = importances / total if total > 0 else importances
+        if self.bootstrap and (oob_cnt > 0).any():
+            covered = oob_cnt > 0
+            oob_pred = np.full(n, np.nan)
+            oob_pred[covered] = oob_sum[covered] / oob_cnt[covered]
+            self.oob_prediction_ = oob_pred
+            denom = np.where(np.abs(y[covered]) > 1e-12, np.abs(y[covered]), 1.0)
+            self.oob_mape_ = float(
+                np.mean(np.abs(oob_pred[covered] - y[covered]) / denom)
+            )
+        self._y_min, self._y_max = float(y.min()), float(y.max())
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        if not self.trees_:
+            raise RuntimeError("forest not fitted")
+        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        acc = np.zeros(len(X))
+        for tree in self.trees_:
+            acc += tree.predict(X)
+        return acc / len(self.trees_)
+
+    # -- persistence (used by the launcher's admission controller) ----------
+
+    def to_dict(self) -> dict:
+        trees = []
+        for t in self.trees_:
+            trees.append(
+                {
+                    "feat": t._feat.tolist(),
+                    "thr": t._thr.tolist(),
+                    "left": t._left.tolist(),
+                    "right": t._right.tolist(),
+                    "val": t._val.tolist(),
+                    "n_features": t.n_features_,
+                }
+            )
+        return {
+            "trees": trees,
+            "y_min": self._y_min,
+            "y_max": self._y_max,
+            "params": {
+                "n_estimators": self.n_estimators,
+                "max_depth": self.max_depth,
+                "min_samples_leaf": self.min_samples_leaf,
+                "max_features": self.max_features,
+            },
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RandomForestRegressor":
+        self = cls(n_estimators=len(d["trees"]))
+        self._y_min = d.get("y_min")
+        self._y_max = d.get("y_max")
+        self.trees_ = []
+        for td in d["trees"]:
+            t = RegressionTree()
+            t.n_features_ = td["n_features"]
+            t._feat = np.array(td["feat"], dtype=np.int64)
+            t._thr = np.array(td["thr"], dtype=np.float64)
+            t._left = np.array(td["left"], dtype=np.int64)
+            t._right = np.array(td["right"], dtype=np.int64)
+            t._val = np.array(td["val"], dtype=np.float64)
+            self.trees_.append(t)
+        return self

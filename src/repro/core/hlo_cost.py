@@ -1,0 +1,369 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, ignoring the
+trip count — for scan-over-layers models that under-reports FLOPs/bytes by a
+factor of n_layers (verified experimentally; see EXPERIMENTS.md §Dry-run).
+This module parses the optimized HLO, builds the computation call graph
+(entry → while bodies × trip count → fusions/calls), and accumulates:
+
+  * flops             — 2·M·N·K per dot (batch dims included), anywhere in
+                        the graph, times the context multiplier
+  * hbm bytes         — Σ over *scheduled* instructions (outside fusion
+                        bodies) of operand+output buffer sizes × multiplier;
+                        fusion internals are on-chip and excluded, matching
+                        XLA's own bytes-accessed convention
+  * collective bytes  — ring-model bytes per all-gather / all-reduce /
+                        reduce-scatter / all-to-all / collective-permute,
+                        times the multiplier (collectives inside scanned
+                        layers count n_layers times)
+
+Trip counts come from the loop-condition pattern emitted by ``lax.scan``
+(compare(get-tuple-element(param), constant(N)) direction=LT).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HloCost", "parse_hlo_cost"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OPCODE_RE = re.compile(r"^\s*(?:\(|)([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclass
+class _Instr:
+    name: str
+    opcode: str
+    dtypes_dims: list[tuple[str, str]]  # output component shapes
+    operands: list[str]
+    raw: str
+
+    @property
+    def out_bytes(self) -> float:
+        return sum(_shape_bytes(dt, dims) for dt, dims in self.dtypes_dims)
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: dict[str, _Instr] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+    trip_counts: dict = field(default_factory=dict)
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _shape_numel(dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _parse_module(text: str) -> tuple[dict[str, _Comp], str | None]:
+    comps: dict[str, _Comp] = {}
+    entry: str | None = None
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        if cur is None:
+            s = line.strip()
+            if s.endswith("{") and "->" in s and ("=" not in s.split("(")[0]):
+                m = _COMP_HDR_RE.match(s)
+                if m:
+                    cur = _Comp(m.group(1))
+                    if s.startswith("ENTRY"):
+                        entry = cur.name
+            continue
+        s = line.strip()
+        if s == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # output shapes: everything before the opcode token
+        op_m = re.search(r"\s([a-z][a-z0-9\-]*)\(", rhs)
+        opcode = op_m.group(1) if op_m else ""
+        shape_part = rhs[: op_m.start()] if op_m else rhs
+        shapes = _SHAPE_RE.findall(shape_part)
+        operand_part = rhs[op_m.start():] if op_m else ""
+        operands = _OPERAND_RE.findall(operand_part)
+        cur.instrs[name] = _Instr(name, opcode, shapes, operands, rhs)
+        cur.order.append(name)
+    return comps, entry
+
+
+def _dot_flops(instr: _Instr, comp: _Comp, comps: dict[str, _Comp]) -> float:
+    """2 × output numel × K (product of contracting dims of the lhs)."""
+    out_numel = sum(_shape_numel(d) for _, d in instr.dtypes_dims)
+    # lhs shape: prefer inline typed operand, else symbol lookup
+    inline = _SHAPE_RE.findall(instr.raw[instr.raw.index("("):])
+    lhs_dims: str | None = inline[0][1] if inline else None
+    if lhs_dims is None and instr.operands:
+        src = comp.instrs.get(instr.operands[0])
+        if src and src.dtypes_dims:
+            lhs_dims = src.dtypes_dims[0][1]
+    k = 1.0
+    cm = _CONTRACT_RE.search(instr.raw)
+    if lhs_dims is not None and cm and cm.group(1):
+        dims = [int(x) for x in lhs_dims.split(",") if x]
+        for ci in cm.group(1).split(","):
+            ci = int(ci)
+            if ci < len(dims):
+                k *= dims[ci]
+    return 2.0 * out_numel * k
+
+
+def _conv_flops(instr: _Instr) -> float:
+    # flops ≈ 2 × out numel × (kernel numel × Cin / (groups·Cout-slice))
+    # parse window + operand kernel shape from inline types
+    inline = _SHAPE_RE.findall(instr.raw[instr.raw.index("("):])
+    out_numel = sum(_shape_numel(d) for _, d in instr.dtypes_dims)
+    if len(inline) >= 2:
+        kdims = [int(x) for x in inline[1][1].split(",") if x]
+        if kdims:
+            # HWIO kernel: all dims except the last (O) multiply
+            k = 1
+            for d in kdims[:-1]:
+                k *= d
+            return 2.0 * out_numel * k
+    return 2.0 * out_numel
+
+
+def _group_size(raw: str) -> int:
+    m = _GROUPS_IOTA_RE.search(raw)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(raw)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _collective_bytes(instr: _Instr) -> float:
+    g = _group_size(instr.raw)
+    frac = (g - 1) / g
+    out = instr.out_bytes
+    kind = instr.opcode.replace("-start", "")
+    if kind == "all-gather":
+        return out * frac
+    if kind == "all-reduce":
+        return 2.0 * out * frac
+    if kind == "reduce-scatter":
+        return out * g * frac
+    if kind == "all-to-all":
+        return out * frac
+    return out  # collective-permute
+
+
+def _trip_count(cond: _Comp) -> int:
+    """Loop bound from a lax.scan condition: the comparison constant.  The
+    compare itself may be wrapped in a fusion, so take the largest integer
+    constant defined in the condition computation (counter inits are 0/1)."""
+    best = 1
+    for name in cond.order:
+        ins = cond.instrs[name]
+        if ins.opcode == "constant":
+            m = _TRIP_RE.search(ins.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_hlo_cost(text: str) -> HloCost:
+    comps, entry = _parse_module(text)
+    cost = HloCost()
+    if entry is None:
+        return cost
+
+    _PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+    def fusion_bytes(instr: _Instr, comp: _Comp) -> float:
+        """Slice-aware traffic for a fusion: a fused dynamic-slice reads only
+        the slice; a fused dynamic-update-slice writes only the update region
+        (the rest of the buffer is aliased in place).  Without this, scanned
+        per-layer slicing of stacked (L, …) params/grads over-counts by L×."""
+        cm = _CALLS_RE.search(instr.raw)
+        called = comps.get(cm.group(1)) if cm else None
+        if called is None:
+            total = instr.out_bytes
+            for op in instr.operands:
+                src = comp.instrs.get(op)
+                if src is not None:
+                    total += src.out_bytes
+            return total
+        # map operand index -> internal parameter name
+        param_names: dict[int, str] = {}
+        for n in called.order:
+            ins2 = called.instrs[n]
+            if ins2.opcode == "parameter":
+                m = _PARAM_IDX_RE.search(ins2.raw)
+                if m:
+                    param_names[int(m.group(1))] = n
+        total = 0.0
+        dus_root = False
+        for idx, op in enumerate(instr.operands):
+            src = comp.instrs.get(op)
+            if src is None:
+                continue
+            pname = param_names.get(idx)
+            eff = src.out_bytes
+            if pname is not None:
+                consumers = [
+                    called.instrs[n] for n in called.order
+                    if pname in called.instrs[n].operands
+                ]
+                if consumers:
+                    if all(c.opcode == "dynamic-slice" for c in consumers):
+                        eff = sum(c.out_bytes for c in consumers)
+                    elif any(
+                        c.opcode == "dynamic-update-slice"
+                        and c.operands and c.operands[0] == pname
+                        for c in consumers
+                    ):
+                        # in-place target: traffic = update region only
+                        upd = 0.0
+                        for c in consumers:
+                            if c.opcode == "dynamic-update-slice" and len(c.operands) > 1:
+                                u = called.instrs.get(c.operands[1])
+                                upd += u.out_bytes if u is not None else 0.0
+                        eff = upd
+                        dus_root = True
+            total += eff
+        # output: if the root is a DUS the full buffer aliases in place
+        if dus_root:
+            for n in called.order:
+                c = called.instrs[n]
+                if c.opcode == "dynamic-update-slice" and len(c.operands) > 1:
+                    u = called.instrs.get(c.operands[1])
+                    total += u.out_bytes if u is not None else 0.0
+        else:
+            total += instr.out_bytes
+        return total
+
+    def op_bytes(instr: _Instr, comp: _Comp) -> float:
+        oc = instr.opcode
+        if oc == "fusion":
+            return fusion_bytes(instr, comp)
+        if oc == "dynamic-slice" or oc == "gather":
+            return 2.0 * instr.out_bytes
+        if oc == "dynamic-update-slice":
+            upd = comp.instrs.get(instr.operands[1]) if len(instr.operands) > 1 else None
+            return 2.0 * (upd.out_bytes if upd is not None else instr.out_bytes)
+        total = instr.out_bytes
+        for op in instr.operands:
+            src = comp.instrs.get(op)
+            if src is not None:
+                total += src.out_bytes
+        return total
+
+    _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id"}
+
+    def walk(comp_name: str, mult: float, seen: tuple = ()):  # noqa: C901
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen:
+            return
+        for name in comp.order:
+            ins = comp.instrs[name]
+            oc = ins.opcode
+            if oc == "while":
+                wm = _WHILE_RE.search(ins.raw)
+                trip = 1
+                body = None
+                if wm:
+                    cond_name, body = wm.group(1), wm.group(2)
+                    if cond_name in comps:
+                        trip = _trip_count(comps[cond_name])
+                cost.trip_counts[name] = trip
+                if body:
+                    walk(body, mult * trip, seen + (comp_name,))
+                continue
+            if oc in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "scatter", "select-and-scatter",
+                      "conditional"):
+                # count dots inside the called computation(s) for flops
+                cm = _CALLS_RE.search(ins.raw)
+                if cm and cm.group(1) in comps:
+                    _flops_only(comps[cm.group(1)], mult, seen + (comp_name,))
+                if oc != "conditional":
+                    cost.hbm_bytes += op_bytes(ins, comp) * mult
+                continue
+            base = oc.replace("-start", "")
+            if base in COLLECTIVES:
+                b = _collective_bytes(ins) * mult
+                cost.collective_bytes += b
+                cost.bytes_by_kind[base] = cost.bytes_by_kind.get(base, 0.0) + b
+                cost.count_by_kind[base] = cost.count_by_kind.get(base, 0) + 1
+                cost.hbm_bytes += op_bytes(ins, comp) * mult
+                continue
+            if oc == "dot":
+                cost.flops += _dot_flops(ins, comp, comps) * mult
+                cost.hbm_bytes += op_bytes(ins, comp) * mult
+                continue
+            if oc == "convolution":
+                cost.flops += _conv_flops(ins) * mult
+                cost.hbm_bytes += op_bytes(ins, comp) * mult
+                continue
+            if oc in _SKIP_BYTES or not oc:
+                continue
+            cost.hbm_bytes += op_bytes(ins, comp) * mult
+
+    def _flops_only(comp: _Comp, mult: float, seen: tuple):
+        if comp.name in seen:
+            return
+        for name in comp.order:
+            ins = comp.instrs[name]
+            if ins.opcode == "dot":
+                cost.flops += _dot_flops(ins, comp, comps) * mult
+            elif ins.opcode == "convolution":
+                cost.flops += _conv_flops(ins) * mult
+            elif ins.opcode in ("fusion", "call"):
+                cm = _CALLS_RE.search(ins.raw)
+                if cm and cm.group(1) in comps:
+                    _flops_only(comps[cm.group(1)], mult, seen + (comp.name,))
+
+    walk(entry, 1.0)
+    return cost

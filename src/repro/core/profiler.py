@@ -1,0 +1,182 @@
+"""Network-wise profiling strategy (paper §5.1, Appendix A).
+
+Each datapoint profiles an *entire* training step — forward pass, backward
+pass and the SGD(+momentum) update — never an isolated layer, because
+frameworks allocate for whole-network execution (paper §3.1).
+
+Attribute definitions (paper §4), adapted to this device (1-core CPU host
+standing in for the edge device; XLA is the framework):
+
+  Γ (gamma_mb)  — total training-step memory: the XLA executable's
+      argument + output + temporary + generated-code bytes from
+      ``compiled.memory_analysis()``.  On TPU this is exactly the per-device
+      HBM plan that decides "fits / doesn't fit" — the deterministic
+      analogue of the paper's /proc/meminfo sampling on unified memory.
+  Φ (phi_ms)    — wall-clock latency of one jitted training step (data
+      preparation excluded, update step included — paper §4), median over
+      ``repeats`` runs after ``warmup`` warmup runs, timed around
+      ``block_until_ready`` (the torch.cuda.Events analogue).
+
+Inference-stage attributes γ/φ (paper §6.4) are profiled the same way over
+a forward-only executable.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn import CNNModel
+
+__all__ = [
+    "ProfileResult",
+    "make_train_step",
+    "make_infer_fn",
+    "profile_training",
+    "profile_inference",
+    "memory_analysis_bytes",
+]
+
+
+@dataclass
+class ProfileResult:
+    gamma_mb: float          # Γ — total memory (MB)
+    phi_ms: float            # Φ — per-step latency (ms)
+    compile_s: float         # one-off compile time (not part of Φ)
+    flops: float | None      # XLA cost-analysis FLOPs, when available
+    temp_mb: float = 0.0
+    arg_mb: float = 0.0
+    out_mb: float = 0.0
+    code_mb: float = 0.0
+
+
+def make_train_step(model: CNNModel, lr: float = 0.01, momentum: float = 0.9):
+    """fwd + bwd + SGD-momentum update, as the paper profiles (§4)."""
+
+    def loss_fn(params, x, y):
+        logits = model.apply(params, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    def step(params, mom, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        mom = jax.tree.map(lambda m, g: momentum * m + g, mom, grads)
+        params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+        return params, mom, loss
+
+    return step
+
+
+def make_infer_fn(model: CNNModel):
+    def infer(params, x):
+        return model.apply(params, x)
+
+    return infer
+
+
+def memory_analysis_bytes(compiled) -> dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "arg": float(getattr(ma, "argument_size_in_bytes", 0.0)),
+        "out": float(getattr(ma, "output_size_in_bytes", 0.0)),
+        "temp": float(getattr(ma, "temp_size_in_bytes", 0.0)),
+        "code": float(getattr(ma, "generated_code_size_in_bytes", 0.0)),
+        "alias": float(getattr(ma, "alias_size_in_bytes", 0.0)),
+    }
+
+
+def _flops(compiled) -> float | None:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return float(ca.get("flops", 0.0)) or None
+    except Exception:
+        return None
+
+
+def _time_calls(fn, args, repeats: int, warmup: int) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e3
+
+
+def profile_training(
+    model: CNNModel,
+    bs: int,
+    *,
+    repeats: int = 2,
+    warmup: int = 1,
+    seed: int = 0,
+    run: bool = True,
+) -> ProfileResult:
+    """Profile Γ and Φ of one training mini-batch for ``model`` at ``bs``."""
+    params = model.init(seed)
+    mom = jax.tree.map(lambda a: np.zeros_like(a), params)
+    np_rng = np.random.default_rng(seed)
+    x = np_rng.normal(size=(bs, model.input_hw, model.input_hw, 3)).astype(np.float32)
+    y = np_rng.integers(0, model.num_classes, size=(bs,)).astype(np.int32)
+
+    step = jax.jit(make_train_step(model))
+    t0 = time.perf_counter()
+    compiled = step.lower(params, mom, x, y).compile()
+    compile_s = time.perf_counter() - t0
+
+    mb = memory_analysis_bytes(compiled)
+    gamma_mb = (mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6
+    phi_ms = _time_calls(compiled, (params, mom, x, y), repeats, warmup) if run else 0.0
+    return ProfileResult(
+        gamma_mb=gamma_mb,
+        phi_ms=phi_ms,
+        compile_s=compile_s,
+        flops=_flops(compiled),
+        temp_mb=mb["temp"] / 1e6,
+        arg_mb=mb["arg"] / 1e6,
+        out_mb=mb["out"] / 1e6,
+        code_mb=mb["code"] / 1e6,
+    )
+
+
+def profile_inference(
+    model: CNNModel,
+    bs: int,
+    *,
+    repeats: int = 3,
+    warmup: int = 1,
+    seed: int = 0,
+    run: bool = True,
+) -> ProfileResult:
+    """Profile γ and φ (inference memory / latency) — paper §6.4."""
+    params = model.init(seed)
+    np_rng = np.random.default_rng(seed)
+    x = np_rng.normal(size=(bs, model.input_hw, model.input_hw, 3)).astype(np.float32)
+
+    fn = jax.jit(make_infer_fn(model))
+    t0 = time.perf_counter()
+    compiled = fn.lower(params, x).compile()
+    compile_s = time.perf_counter() - t0
+
+    mb = memory_analysis_bytes(compiled)
+    gamma_mb = (mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6
+    phi_ms = _time_calls(compiled, (params, x), repeats, warmup) if run else 0.0
+    return ProfileResult(
+        gamma_mb=gamma_mb,
+        phi_ms=phi_ms,
+        compile_s=compile_s,
+        flops=_flops(compiled),
+        temp_mb=mb["temp"] / 1e6,
+        arg_mb=mb["arg"] / 1e6,
+        out_mb=mb["out"] / 1e6,
+        code_mb=mb["code"] / 1e6,
+    )

@@ -1,0 +1,223 @@
+"""Sharding rules: DP (+pod) × TP (+EP) GSPMD PartitionSpecs for every
+parameter, batch input, cache and optimizer-state leaf, per architecture.
+
+Conventions (see DESIGN.md §6):
+  * "model" axis: attention heads / FFN hidden / vocab / experts / SSD heads.
+  * "data" axis:  batch (training & batched decode); KV-cache sequence for the
+    single-sequence long-context cell; ZeRO/FSDP shard of opt-state & (for
+    very large archs) parameters.
+  * "pod" axis:   outermost data parallelism (gradient all-reduce crosses DCI).
+
+Every rule checks divisibility against the actual mesh axis size and falls
+back to replication — a 40-head arch on a 16-way model axis replicates heads
+rather than producing an invalid spec (recorded by ``describe_sharding``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as T
+
+__all__ = [
+    "param_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+    "state_pspecs",
+    "to_named",
+    "fsdp_wanted",
+]
+
+
+def _axis(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= _axis(mesh, a)
+    return n
+
+
+def _maybe(axis_name: str, dim: int, mesh) -> str | None:
+    """axis_name if dim divides evenly on the mesh, else None (replicate)."""
+    sz = _axis(mesh, axis_name)
+    return axis_name if sz > 1 and dim % sz == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _param_rule(name: str, shape: tuple[int, ...], stacked: bool, mesh, cfg) -> P:
+    """PartitionSpec for one parameter leaf (shape includes the stack dim
+    when ``stacked``)."""
+    s = shape[1:] if stacked else shape
+    lead = (None,) if stacked else ()
+
+    def spec(*dims):
+        return P(*lead, *dims)
+
+    m = "model"
+    if name == "embed":
+        return spec(_maybe(m, s[0], mesh), None)
+    if name == "lm_head":
+        return spec(None, _maybe(m, s[1], mesh))
+    if name in ("wq",):
+        return spec(None, _maybe(m, s[1], mesh))
+    if name in ("wk", "wv"):
+        return spec(None, _maybe(m, s[1], mesh))
+    if name == "wo":
+        return spec(_maybe(m, s[0], mesh), None)
+    if name in ("gate", "up"):
+        if len(s) == 3:  # MoE expert (E, D, F): expert-parallel
+            return spec(_maybe(m, s[0], mesh), None, None)
+        return spec(None, _maybe(m, s[1], mesh))
+    if name == "down":
+        if len(s) == 3:  # (E, F, D)
+            return spec(_maybe(m, s[0], mesh), None, None)
+        return spec(_maybe(m, s[0], mesh), None)
+    if name == "router":
+        return spec(None, None)
+    if name in ("w_z", "w_x"):
+        return spec(None, _maybe(m, s[1], mesh))
+    if name == "out_proj":
+        return spec(_maybe(m, s[0], mesh), None)
+    if name in ("bq",):
+        return spec(_maybe(m, s[0], mesh))
+    # small/replicated: norms, biases, router, conv, dt/A/D, w_B, w_C, w_dt
+    return spec(*([None] * len(s)))
+
+
+def param_pspecs(cfg: ArchConfig, mesh, *, fsdp: bool = False) -> dict:
+    shape_tree = T._shape_tree(cfg)
+
+    def leaf(path, shape):
+        name = path[-1].key
+        stacked = any(
+            getattr(p, "key", None) in ("blocks", "encoder") for p in path
+        )
+        spec = _param_rule(name, shape, stacked, mesh, cfg)
+        if fsdp:
+            spec = _zero_extend(spec, shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        leaf, shape_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def fsdp_wanted(cfg: ArchConfig, mesh, hbm_budget_gb: float = 8.0) -> bool:
+    """FSDP the parameters when the TP-sharded copy alone would eat more than
+    ``hbm_budget_gb`` per device."""
+    m = _axis(mesh, "model")
+    return cfg.param_count() * 2 / m > hbm_budget_gb * 1e9
+
+
+# ---------------------------------------------------------------------------
+# ZeRO extension (optimizer state / FSDP params)
+# ---------------------------------------------------------------------------
+
+
+def _zero_extend(spec: P, shape: tuple[int, ...], mesh, axis: str = "data") -> P:
+    """Shard the largest still-replicated dim over ``axis`` (ZeRO-style)."""
+    sz = _axis(mesh, axis)
+    if sz <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = -1, -1
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None and d % sz == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best >= 0:
+        entries[best] = axis
+    return P(*entries)
+
+
+def state_pspecs(cfg: ArchConfig, mesh, *, kind: str = "adamw",
+                 fsdp: bool | None = None) -> dict:
+    fsdp = fsdp_wanted(cfg, mesh) if fsdp is None else fsdp
+    ps = param_pspecs(cfg, mesh, fsdp=fsdp)
+    shape_tree = T._shape_tree(cfg)
+    slots = jax.tree_util.tree_map_with_path(
+        lambda path, shape: _zero_extend(
+            _param_rule(
+                path[-1].key, shape,
+                any(getattr(p, "key", None) in ("blocks", "encoder") for p in path),
+                mesh, cfg,
+            ),
+            shape, mesh,
+        ),
+        shape_tree, is_leaf=lambda x: isinstance(x, tuple),
+    )
+    opt = {"step": P(), "m": slots}
+    if kind == "adamw":
+        opt["v"] = slots
+    return {"params": ps, "opt": opt}
+
+
+# ---------------------------------------------------------------------------
+# Batch & cache
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> dict:
+    dp = _dp_axes(mesh)
+    dp_ok = shape.global_batch % _dp_size(mesh) == 0
+    b = dp if dp_ok else None
+    specs: dict = {"tokens": P(b, None)}
+    if shape.kind in ("train", "prefill"):
+        if cfg.n_prefix:
+            specs["patches"] = P(b, None, None)
+        if cfg.n_encoder_layers:
+            specs["frames"] = P(b, None, None)
+    else:
+        specs["tokens"] = P(b, None)
+        specs["cache_len"] = P()
+        if cfg.n_encoder_layers:
+            specs["memory"] = P(b, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> dict:
+    """Decode-cache specs.  Batched decode shards batch over DP; the
+    single-sequence long-context cell shards the KV sequence dim over data
+    (sequence parallelism for cache reads)."""
+    dp = _dp_axes(mesh)
+    dp_ok = shape.global_batch % _dp_size(mesh) == 0
+    b = dp if dp_ok else None
+    seq = None if dp_ok else _maybe("data", shape.seq_len, mesh)
+    shapes = T.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+
+    def leaf(path, s):
+        name = path[-1].key
+        if name in ("k", "v"):      # (n, B, S, Hkv, Dh)
+            return P(None, b, seq, _maybe("model", s[3], mesh), None)
+        if name == "state":          # (n, B, H, P, N)
+            return P(None, b, _maybe("model", s[2], mesh), None, None)
+        if name == "conv":           # (n, B, W-1, d_conv_ch)
+            return P(None, b, None, None)
+        raise KeyError(name)
+
+    return jax.tree_util.tree_map_with_path(
+        leaf, shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def to_named(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,22 @@
+"""Jitted public wrapper for the MM-convolution kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import conv_mm_kernel
+from .ref import conv_ref
+
+__all__ = ["conv_mm"]
+
+
+@partial(jax.jit, static_argnames=("stride", "padding", "block_o", "interpret"))
+def conv_mm(x, w, *, stride=1, padding=0, block_o=None, interpret=False):
+    if jax.default_backend() == "tpu" or interpret:
+        return conv_mm_kernel(
+            x, w, stride=stride, padding=padding, block_o=block_o,
+            interpret=interpret or jax.default_backend() != "tpu",
+        )
+    return conv_ref(x, w, stride=stride, padding=padding)

@@ -1,0 +1,44 @@
+"""Pure-jnp/XLA oracle for the MM-convolution kernel — this is also the
+paper's *materialising* im2col variant: the explicit im2col matrix
+(``mem_i2c_total`` feature) is built in memory, then one matmul runs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["conv_ref", "conv_im2col_ref"]
+
+
+def conv_ref(x, w, *, stride=1, padding=0):
+    """XLA convolution (NHWC / HWIO)."""
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding)] * 2,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_im2col_ref(x, w, *, stride=1, padding=0):
+    """Materialised im2col + single matmul (paper's mem_i2c_total variant)."""
+    N, H, W, C = x.shape
+    KH, KW, _, O = w.shape
+    OH = 1 + (H + 2 * padding - KH) // stride
+    OW = 1 + (W + 2 * padding - KW) // stride
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    cols = []
+    for i in range(KH):
+        for j in range(KW):
+            patch = jax.lax.slice(
+                x, (0, i, j, 0),
+                (N, i + (OH - 1) * stride + 1, j + (OW - 1) * stride + 1, C),
+                (1, stride, stride, 1),
+            )
+            cols.append(patch.reshape(N, OH * OW, C))
+    im2col = jnp.concatenate(cols, axis=-1)          # (N, OH·OW, KH·KW·C)
+    wmat = w.transpose(0, 1, 2, 3).reshape(KH * KW * C, O)
+    y = jnp.einsum("npk,ko->npo", im2col.astype(jnp.float32),
+                   wmat.astype(jnp.float32))
+    return y.reshape(N, OH, OW, O).astype(x.dtype)

@@ -1,0 +1,103 @@
+"""Flash-attention Pallas TPU kernel (blockwise online softmax).
+
+TPU mapping: grid = (batch, q_head, Sq/block_q).  Each program loads one
+query block into VMEM, streams the full K/V for the matching KV head
+(GQA: kv_head = q_head // (H/Hkv)) in ``block_k`` chunks, and maintains the
+online-softmax running max/sum in f32 VREGs.  MXU dims are aligned by
+construction (block_q × Dh and block_q × block_k matmuls, Dh and blocks
+multiples of 128 for full-size configs; smaller test shapes still validate
+in interpret mode).
+
+VMEM budget per program (bf16, block_q=512, block_k=512, Dh=128):
+  q 128 KiB + k/v tiles 2×128 KiB + acc f32 256 KiB  ≈ 0.7 MiB  « 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_kernel", "flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _attn_body(q_ref, k_ref, v_ref, o_ref, *, scale, causal, block_k, q_offset):
+    """One (batch, head, q-block) program."""
+    bq, dh = q_ref.shape[-2], q_ref.shape[-1]
+    sk = k_ref.shape[-2]
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # (bq, dh)
+    qi = pl.program_id(2)
+    q_pos = q_offset + qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    nkb = sk // block_k
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                        # (bq, bk)
+        if causal:
+            k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nkb, body, (acc0, m0, l0))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (padding)
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q, k, v, *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    q_offset: int = 0,
+    interpret: bool = False,
+):
+    """q: (B, H, Sq, Dh);  k, v: (B, Hkv, Sk, Dh)  →  (B, H, Sq, Dh).
+
+    ``q_offset``: position of q[0] relative to k[0] (decode/chunked use).
+    """
+    B, H, Sq, Dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    assert H % Hkv == 0, (H, Hkv)
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+
+    grid = (B, H, Sq // block_q)
+    kernel = functools.partial(
+        _attn_body, scale=scale, causal=causal, block_k=block_k,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Sk, Dh), lambda b, h, i: (b, h // rep, 0, 0)),
+            pl.BlockSpec((1, 1, Sk, Dh), lambda b, h, i: (b, h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, Dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

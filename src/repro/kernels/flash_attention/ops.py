@@ -1,0 +1,33 @@
+"""Jitted public wrapper for flash attention.
+
+On TPU this dispatches to the Pallas kernel; elsewhere (CPU container) it
+runs the kernel in interpret mode (tests) or falls back to the blocked-XLA
+path used by the model code.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_kernel
+from .ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "q_offset",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
+                    q_offset=0, interpret=False):
+    if _on_tpu() or interpret:
+        return flash_attention_kernel(
+            q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+            q_offset=q_offset, interpret=interpret or not _on_tpu(),
+        )
+    return attention_ref(q, k, v, causal=causal, q_offset=q_offset)

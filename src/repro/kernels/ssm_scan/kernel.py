@@ -1,0 +1,97 @@
+"""SSD intra-chunk Pallas TPU kernel (Mamba-2 state-space duality).
+
+The chunked SSD algorithm splits into a *parallel* part (quadratic
+attention-like compute inside each chunk + per-chunk state summaries) and a
+tiny *sequential* part (the inter-chunk state recurrence).  The parallel
+part is ~99.9% of FLOPs and is what this kernel implements; the recurrence
+stays in JAX (``ops.py``) — matching how the hardware wants it: big MXU
+matmuls per chunk, a short scan over (H, P, N) states between chunks.
+
+Grid = (B, n_chunks, H).  Per program, VMEM holds one chunk of one head:
+x (l, P), a (l,), B/C (l, N) — for l=128, P=64, N=128 that is ≈ 0.2 MiB.
+Outputs: y_diag (l, P), chunk state (P, N), chunk decay (scalar), and the
+within-chunk cumulative decay (l,) needed for the y_off correction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ssd_chunk_kernel"]
+
+
+def _ssd_body(x_ref, a_ref, b_ref, c_ref, y_ref, st_ref, dec_ref, cum_ref):
+    l, P = x_ref.shape[1], x_ref.shape[3]
+    N = b_ref.shape[-1]
+    x = x_ref[0, :, 0, :].astype(jnp.float32)     # (l, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)        # (l,)
+    Bm = b_ref[0].astype(jnp.float32)             # (l, N)
+    Cm = c_ref[0].astype(jnp.float32)             # (l, N)
+
+    cum = jnp.cumsum(a)                            # (l,)
+    last = cum[l - 1]
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j<=i else 0
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.iota(jnp.int32, l)
+    tril = ii[:, None] >= ii[None, :]
+    L = jnp.where(tril, jnp.exp(seg), 0.0)         # (l, l)
+    s = jax.lax.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # (l, l)
+    y = jax.lax.dot(s * L, x, preferred_element_type=jnp.float32)  # (l, P)
+
+    # chunk state: Σ_i exp(cum_last - cum_i) B_i ⊗ x_i  → (N, P)
+    decay_states = jnp.exp(last - cum)             # (l,)
+    st = jax.lax.dot(
+        (Bm * decay_states[:, None]).T, x, preferred_element_type=jnp.float32
+    )                                               # (N, P)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+    dec_ref[0, 0, 0] = jnp.exp(last).astype(dec_ref.dtype)
+    cum_ref[0, 0, 0] = cum.astype(cum_ref.dtype)
+
+
+def ssd_chunk_kernel(xh, a, Bm, Cm, *, chunk: int, interpret: bool = False):
+    """Intra-chunk SSD.
+
+    xh: (B, S, H, P) dt-scaled inputs;  a: (B, S, H) log-decays;
+    Bm, Cm: (B, S, N) (single B/C group, broadcast over heads).
+    Returns (y_diag (B,S,H,P), states (B,nc,H,N,P), chunk_decay (B,nc,H),
+             cum_a (B,nc,H,l)).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+
+    # (B, nc, l, H, P) views via index maps (no copies)
+    grid = (B, nc, H)
+    f32 = jnp.float32
+    outs = [
+        jax.ShapeDtypeStruct((B, S, H, P), xh.dtype),      # y_diag
+        jax.ShapeDtypeStruct((B, nc, H, N, P), f32),       # states
+        jax.ShapeDtypeStruct((B, nc, H), f32),             # chunk decay
+        jax.ShapeDtypeStruct((B, nc, H, chunk), f32),      # cum within chunk
+    ]
+    kernel = _ssd_body
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c, h: (b, c, h)),
+            pl.BlockSpec((1, chunk, N), lambda b, c, h: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c, h: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, c, h: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c, h: (b, c, h)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, c, h: (b, c, h, 0)),
+        ],
+        out_shape=outs,
+        interpret=interpret,
+    )(xh, a, Bm, Cm)

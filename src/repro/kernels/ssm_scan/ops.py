@@ -1,0 +1,51 @@
+"""Jitted SSD op: Pallas intra-chunk kernel + JAX inter-chunk recurrence."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk_kernel
+from .ref import ssd_ref
+
+__all__ = ["ssd"]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(xh, a, Bm, Cm, *, chunk=128, initial_state=None, interpret=False):
+    """Full SSD: y (B,S,H,P) and final state (B,H,P,N).
+
+    Pallas path: intra-chunk kernel (parallel, MXU-heavy) + lax.scan over the
+    per-chunk states (sequential, tiny) + y_off correction.
+    """
+    if not (jax.default_backend() == "tpu" or interpret):
+        return ssd_ref(xh, a, Bm, Cm, chunk=chunk, initial_state=initial_state)
+
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    y_diag, states, chunk_decay, cum = ssd_chunk_kernel(
+        xh, a, Bm, Cm, chunk=chunk, interpret=interpret,
+    )
+    # inter-chunk recurrence over (B, nc, H, N, P) states
+    s0 = (initial_state.astype(jnp.float32).transpose(0, 1, 3, 2)
+          if initial_state is not None else jnp.zeros((B, H, N, P), jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                     # (B,H,N,P), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                 # emit state entering the chunk
+
+    st_seq = jnp.moveaxis(states, 1, 0)          # (nc,B,H,N,P)
+    dec_seq = jnp.moveaxis(chunk_decay, 1, 0)    # (nc,B,H)
+    final, prev = jax.lax.scan(step, s0, (st_seq, dec_seq))
+    prev = jnp.moveaxis(prev, 0, 1)              # (B,nc,H,N,P)
+
+    # y_off[b,c,l,h,p] = exp(cum) · C_l · prev_state
+    Cc = Cm.reshape(B, nc, chunk, N)
+    y_off = jnp.einsum("bcln,bchnp,bchl->bclhp",
+                       Cc.astype(jnp.float32), prev, jnp.exp(cum))
+    y = y_diag.astype(jnp.float32) + y_off.reshape(B, S, H, P)
+    return y.astype(xh.dtype), final.transpose(0, 1, 3, 2)

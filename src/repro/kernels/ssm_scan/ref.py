@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD kernel: the chunked scan from
+``repro.models.layers.ssd_scan`` restricted to a single B/C group, plus a
+naive O(S²) sequential-recurrence oracle used to validate both."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ssd_scan
+
+__all__ = ["ssd_ref", "ssd_naive"]
+
+
+def ssd_ref(xh, a, Bm, Cm, *, chunk: int = 128, initial_state=None):
+    """xh: (B,S,H,P); a: (B,S,H); Bm/Cm: (B,S,N) → (y, final_state)."""
+    return ssd_scan(xh, a, Bm[:, :, None, :], Cm[:, :, None, :], chunk,
+                    initial_state=initial_state)
+
+
+def ssd_naive(xh, a, Bm, Cm, initial_state=None):
+    """Token-by-token recurrence (the SSM definition, no chunking)."""
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    st = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+    ys = []
+    for t in range(S):
+        dec = jnp.exp(a[:, t].astype(jnp.float32))             # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xh[:, t].astype(jnp.float32),
+                         Bm[:, t].astype(jnp.float32))
+        st = st * dec[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", st, Cm[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(xh.dtype), st

@@ -1,0 +1,55 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init,
+while smoke tests and benches must keep seeing the single real device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "dp_axes", "TPU_V5E"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (hillclimbing explores non-default layouts).  Uses the
+    first prod(shape) devices so a 512-device dry-run host can build both the
+    256-chip single-pod and the 512-chip multi-pod mesh."""
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — the dry-run "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "any jax import (see launch/dryrun.py)"
+        )
+    import numpy as _np
+
+    return jax.sharding.Mesh(
+        _np.array(devs[:n]).reshape(shape), axes
+    )
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Data-parallel axes present on this mesh (pod is outer DP)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+# TPU v5e hardware constants (per chip) — roofline denominators.
+TPU_V5E = {
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link (~45-50 GB/s each direction)
+    "hbm_bytes": 16e9,           # capacity
+}

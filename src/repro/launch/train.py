@@ -1,0 +1,88 @@
+"""Training launcher with perf4sight admission control.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --steps 50 --ckpt-dir /tmp/ck
+
+Before building the jitted step, the launcher predicts the training-step
+memory footprint (AOT ``lower().compile().memory_analysis()`` at smoke
+scale, or the fitted perf4sight forest when a model file is supplied) and
+refuses jobs over the budget — the paper's §6.4 safety property.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.optim.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-compression", type=float, default=None)
+    ap.add_argument("--memory-budget-gb", type=float, default=None,
+                    help="admission gate: refuse if predicted HBM exceeds this")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+
+    admission = None
+    if args.memory_budget_gb is not None:
+        def admission(cfg, shape):
+            from repro.launch.dryrun import lower_cell  # noqa: PLC0415
+            # smoke-scale AOT estimate on the local device
+            from repro.models import transformer as T
+            from repro.optim.optimizer import apply_updates, init_opt_state
+
+            params = T.init_params(cfg, 0)
+            opt_cfg = OptimizerConfig()
+
+            def step(state, batch):
+                (l, _), g = jax.value_and_grad(T.loss_fn, has_aux=True)(
+                    state["params"], batch, cfg)
+                p2, o2, _ = apply_updates(state["params"], g, state["opt"], opt_cfg)
+                return {"params": p2, "opt": o2}, l
+
+            from repro.data.pipeline import make_batch
+            state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
+            batch = make_batch(cfg, shape, 0)
+            compiled = jax.jit(step).lower(state, batch).compile()
+            ma = compiled.memory_analysis()
+            gb = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                  + ma.temp_size_in_bytes) / 1e9
+            return gb <= args.memory_budget_gb, {"predicted_gb": gb}
+
+    opt = OptimizerConfig(kind="adamw", lr=args.lr, warmup_steps=10,
+                          total_steps=max(args.steps, 100))
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         grad_compression=args.grad_compression)
+    trainer = Trainer(cfg, shape, opt, tcfg, admission=admission)
+    out = trainer.train(args.steps)
+    h = out["history"]
+    print(json.dumps({
+        "arch": cfg.name,
+        "steps": len(h),
+        "first_loss": h[0]["loss"] if h else None,
+        "last_loss": h[-1]["loss"] if h else None,
+        "mean_step_ms": sum(r["dt"] for r in h) / max(len(h), 1) * 1e3,
+        "stragglers": len(out["stragglers"]),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

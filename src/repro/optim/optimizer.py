@@ -1,0 +1,98 @@
+"""Optimizers: AdamW and SGD-momentum, with global-norm clipping and
+schedules.  Pure ``jax.tree`` transforms so GSPMD shards the optimizer state
+exactly like (or more finely than) the parameters — see
+``repro.distributed.sharding.zero_extend`` for the ZeRO-style state sharding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerConfig", "init_opt_state", "apply_updates", "cosine_schedule",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"          # adamw | sgdm
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9        # sgdm
+    clip_norm: float | None = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def cosine_schedule(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def init_opt_state(params, cfg: OptimizerConfig) -> dict:
+    """f32 slots.  AdamW: m, v; SGD-m: m only.  ``step`` is a scalar."""
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state: dict = {"step": jnp.zeros((), jnp.int32), "m": jax.tree.map(f32, params)}
+    if cfg.kind == "adamw":
+        state["v"] = jax.tree.map(f32, params)
+    return state
+
+
+def apply_updates(params, grads, opt_state, cfg: OptimizerConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    metrics = {}
+    if cfg.clip_norm is not None:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+        metrics["grad_norm"] = gn
+    step = opt_state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    metrics["lr"] = lr
+
+    if cfg.kind == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         opt_state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         opt_state["v"], grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}, metrics
+
+    if cfg.kind == "sgdm":
+        m = jax.tree.map(lambda m, g: cfg.momentum * m + g.astype(jnp.float32),
+                         opt_state["m"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype), params, m
+        )
+        return new_params, {"step": step, "m": m}, metrics
+
+    raise ValueError(cfg.kind)

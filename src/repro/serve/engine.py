@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill + KV-cache decode with slot management.
+
+Continuous-batching-lite: a fixed pool of ``n_slots`` sequences; finished
+sequences (EOS or max length) free their slot for the next queued request.
+Sampling is greedy or temperature-based.  The decode step is a single jitted
+function reused across the whole serving lifetime (shape-stable: the cache
+is allocated once at ``max_len``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+__all__ = ["ServeConfig", "ServeEngine"]
+
+
+@dataclass
+class ServeConfig:
+    max_len: int = 512
+    n_slots: int = 8
+    temperature: float = 0.0     # 0 = greedy
+    eos_id: int = 1
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig | None = None):
+        self.cfg = cfg
+        self.scfg = scfg or ServeConfig()
+        self.params = params
+        B, L = self.scfg.n_slots, self.scfg.max_len
+
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, b, cfg, max_len=L)
+        )
+        self._decode = jax.jit(
+            lambda p, c, b: T.decode_step(p, c, b, cfg), donate_argnums=(1,)
+        )
+        self._rng = np.random.default_rng(self.scfg.seed)
+
+    # ------------------------------------------------------------------
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        logits = np.asarray(logits[:, -1].astype(jnp.float32))
+        if self.scfg.temperature <= 0:
+            return logits.argmax(-1).astype(np.int32)
+        p = np.exp(logits / self.scfg.temperature -
+                   (logits / self.scfg.temperature).max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        return np.array([self._rng.choice(len(row), p=row) for row in p],
+                        dtype=np.int32)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32) -> dict:
+        """prompts: (B, S0) int32 (B ≤ n_slots; right-aligned, no padding).
+
+        Returns dict with generated tokens (B, ≤max_new) and stats.
+        """
+        B, S0 = prompts.shape
+        assert B <= self.scfg.n_slots
+        out = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        cache, cache_len = out["cache"], out["cache_len"]
+        tok = self._sample(out["logits"])
+        generated = [tok]
+        finished = np.zeros(B, bool)
+        steps = 0
+        for _ in range(max_new_tokens - 1):
+            batch = {"tokens": jnp.asarray(tok[:, None]),
+                     "cache_len": cache_len}
+            logits, cache = self._decode(self.params, cache, batch)
+            cache_len = cache_len + 1
+            steps += 1
+            tok = self._sample(logits)
+            tok = np.where(finished, self.scfg.eos_id, tok).astype(np.int32)
+            finished |= tok == self.scfg.eos_id
+            generated.append(tok)
+            if finished.all() or int(cache_len) >= self.scfg.max_len - 1:
+                break
+        return {
+            "tokens": np.stack(generated, axis=1),
+            "decode_steps": steps + 1,
+            "finished": finished,
+        }

@@ -1,0 +1,145 @@
+"""Fault-tolerant sharded checkpointing.
+
+Layout (one directory per step)::
+
+    <dir>/step_000100.tmp/   — written first
+        shard_00000.npz      — flattened {path: array} chunks
+        manifest.json        — tree structure, shapes, dtypes, step
+    <dir>/step_000100/       — atomic rename when complete
+
+Properties required at 1000-node scale, all tested:
+  * atomic visibility (a crash mid-write never leaves a readable-but-corrupt
+    checkpoint; the .tmp suffix is ignored by ``latest_step``),
+  * keep-N garbage collection,
+  * mesh-shape-agnostic restore: arrays are stored logically (unsharded) and
+    re-placed under any new mesh/sharding on load — elastic re-scaling is a
+    restore with different shardings,
+  * exact resume (step counter stored in the manifest).
+
+bfloat16 leaves are stored via a uint16 view (npz has no native bf16).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "list_steps"]
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+_SHARD_LEAVES = 64  # leaves per npz shard file
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, state, *, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:09d}"
+    tmp = os.path.join(directory, name + ".tmp")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    flat = _flatten(state)
+    keys = sorted(flat)
+    manifest = {"step": step, "leaves": {}, "n_shards": 0}
+    shard, shard_idx = {}, 0
+    for i, k in enumerate(keys):
+        a = flat[k]
+        entry = {"shape": list(a.shape), "dtype": str(a.dtype), "shard": shard_idx}
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)
+            entry["bf16"] = True
+        manifest["leaves"][k] = entry
+        shard[k.replace("/", "__")] = a
+        if len(shard) >= _SHARD_LEAVES or i == len(keys) - 1:
+            np.savez(os.path.join(tmp, f"shard_{shard_idx:05d}.npz"), **shard)
+            shard, shard_idx = {}, shard_idx + 1
+    manifest["n_shards"] = shard_idx
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # atomic commit
+
+    # keep-N GC (never deletes the one just written)
+    steps = list_steps(directory)
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"), ignore_errors=True)
+    return final
+
+
+def list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for n in os.listdir(directory):
+        m = _STEP_RE.match(n)
+        if m and os.path.exists(os.path.join(directory, n, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, step: int | None = None, *,
+                       template=None, shardings=None):
+    """Load a checkpoint.  ``template`` (a pytree with the target structure)
+    rebuilds the tree; ``shardings`` (matching pytree of Sharding) re-places
+    arrays on a possibly different mesh (elastic restore)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    shards: dict[int, dict] = {}
+    flat = {}
+    for key, entry in manifest["leaves"].items():
+        si = entry["shard"]
+        if si not in shards:
+            shards[si] = np.load(os.path.join(path, f"shard_{si:05d}.npz"))
+        a = shards[si][key.replace("/", "__")]
+        if entry.get("bf16"):
+            a = a.view(jnp.bfloat16)
+        flat[key] = a
+
+    if template is None:
+        return manifest["step"], flat
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    flat_shardings = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    for i, (path_keys, leaf) in enumerate(paths):
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        a = flat[key]
+        if flat_shardings is not None:
+            a = jax.device_put(a, flat_shardings[i])
+        leaves.append(a)
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,68 @@
+"""Checkpointing: atomicity, keep-N GC, bf16 roundtrip, exact resume."""
+
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": rng.standard_normal((4, 8)).astype(np.float32),
+            "b": rng.standard_normal((8,)).astype(jnp.bfloat16),
+        },
+        "opt": {"step": np.int32(7), "m": {"w": rng.standard_normal((4, 8)).astype(np.float32)}},
+    }
+
+
+def test_roundtrip_with_bf16(tmp_path):
+    d = str(tmp_path / "ck")
+    s = _state()
+    ckpt.save_checkpoint(d, 10, s)
+    step, restored = ckpt.restore_checkpoint(d, template=s)
+    assert step == 10
+    np.testing.assert_array_equal(restored["params"]["w"], s["params"]["w"])
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["b"], dtype=np.float32),
+        np.asarray(s["params"]["b"], dtype=np.float32),
+    )
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_keep_n_gc(tmp_path):
+    d = str(tmp_path / "ck")
+    s = _state()
+    for step in range(5):
+        ckpt.save_checkpoint(d, step, s, keep=2)
+    assert ckpt.list_steps(d) == [3, 4]
+
+
+def test_latest_ignores_partial_tmp(tmp_path):
+    d = str(tmp_path / "ck")
+    s = _state()
+    ckpt.save_checkpoint(d, 1, s)
+    # simulate a crash mid-write: tmp dir without manifest
+    os.makedirs(os.path.join(d, "step_000000002.tmp"))
+    # and a committed-looking dir without manifest (unreadable)
+    os.makedirs(os.path.join(d, "step_000000003"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore_checkpoint(str(tmp_path / "none"))
+
+
+def test_restore_specific_step(tmp_path):
+    d = str(tmp_path / "ck")
+    s1, s2 = _state(1), _state(2)
+    ckpt.save_checkpoint(d, 1, s1, keep=5)
+    ckpt.save_checkpoint(d, 2, s2, keep=5)
+    _, r1 = ckpt.restore_checkpoint(d, step=1, template=s1)
+    np.testing.assert_array_equal(r1["params"]["w"], s1["params"]["w"])

@@ -1,0 +1,133 @@
+"""Unit + property tests for the paper's 42 analytical features (App. B)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.features import (
+    FEATURE_NAMES,
+    FEATURE_NAMES_CONCAT,
+    ConvLayerSpec,
+    NetworkSpec,
+    layer_features,
+    network_features,
+)
+
+
+def test_feature_count_matches_paper():
+    assert len(FEATURE_NAMES) == 42  # paper §5.3: "These set of 42 features"
+    assert len(FEATURE_NAMES_CONCAT) == 42 + 14  # winograd applied twice
+
+
+def test_ofm_size_formula():
+    # op = 1 + floor((ip + 2p - k)/s)
+    l = ConvLayerSpec(n=8, m=3, k=3, stride=2, padding=1, ip=32)
+    assert l.op == 1 + (32 + 2 - 3) // 2  # 16
+
+
+def test_hand_computed_tensor_allocations():
+    # 3x3 conv, 4 filters, 2 in-channels, 8x8 input, stride 1, pad 1, bs=2
+    l = ConvLayerSpec(n=4, m=2, k=3, stride=1, padding=1, ip=8)
+    f = layer_features(l, bs=2)
+    assert l.op == 8
+    assert f["mem_w"] == 4 * 2 * 9                      # n * m/g * k^2
+    assert f["mem_w_grad"] == 2 * 4 * 2 * 9             # bs * n * m/g * k^2
+    assert f["mem_ifm_grad"] == 2 * 2 * 64              # bs * m * ip^2
+    assert f["mem_ofm_grad"] == 2 * 4 * 64              # bs * n * op^2
+    assert f["mem_alloc_total"] == (
+        f["mem_w"] + f["mem_w_grad"] + f["mem_ifm_grad"] + f["mem_ofm_grad"]
+    )
+
+
+def test_hand_computed_matmul_features():
+    l = ConvLayerSpec(n=4, m=2, k=3, stride=1, padding=1, ip=8)
+    f = layer_features(l, bs=2)
+    assert f["mm_i2c_fwd_total"] == 2 * 64 * 9 * 2      # bs * op^2 * k^2 * m
+    assert f["mm_i2c_fwd_index"] == 2 * 64              # bs * op^2
+    assert f["mm_ops_fwd"] == 2 * 4 * 64 * 9 * 2        # bs * n * op^2 * k^2 * m/g
+    assert f["mm_ops_bwdx"] == 2 * 2 * 64 * 9 * 4       # bs * m * ip^2 * k^2 * n
+    assert f["mm_ops_sum"] == 2 * f["mm_ops_fwd"] + f["mm_ops_bwdx"]
+
+
+def test_hand_computed_fft_features():
+    l = ConvLayerSpec(n=4, m=2, k=3, stride=1, padding=1, ip=8)
+    f = layer_features(l, bs=2)
+    assert f["fft_w_fwd"] == 4 * 2 * 8 * 9              # n * m/g * ip * (1+ip)
+    assert f["fft_ifm_fwd"] == 2 * 2 * 8 * 9            # bs * m * ip * (1+ip)
+    common = 2 * (2 + 4) + 4 * 2
+    expected_ops = 64 * math.log(8) * common + 2 * 4 * 2 * 64
+    assert f["fft_ops_fwd"] == pytest.approx(expected_ops)
+
+
+def test_hand_computed_winograd_features():
+    l = ConvLayerSpec(n=4, m=2, k=3, stride=1, padding=1, ip=8)
+    f43 = layer_features(l, bs=2, qr_mode="concat")
+    # (q,r) = (4,3): tiles = ceil(8/4)^2 = 4, had = 36
+    assert f43["wino_mem_fwd_q4r3"] == 2 * 4 * 4 * 3 * 36
+    # ops_fwd = bs*n*(m/g)*tiles_ip*tiles_k*had ; tiles_k = ceil(3/3)^2 = 1
+    assert f43["wino_ops_fwd_q4r3"] == 2 * 4 * 2 * 4 * 1 * 36
+    # "sum" mode adds the (3,2) instantiation
+    f = layer_features(l, bs=2, qr_mode="sum")
+    f32 = f43["wino_mem_fwd_q3r2"]
+    assert f["wino_mem_fwd"] == f43["wino_mem_fwd_q4r3"] + f32
+
+
+def test_grouped_conv_divides_channels():
+    lg = ConvLayerSpec(n=8, m=8, k=3, groups=8, ip=16, padding=1)
+    ld = ConvLayerSpec(n=8, m=8, k=3, groups=1, ip=16, padding=1)
+    fg, fd = layer_features(lg, 4), layer_features(ld, 4)
+    assert fg["mem_w"] == fd["mem_w"] / 8
+    assert fg["mm_ops_fwd"] == fd["mm_ops_fwd"] / 8
+
+
+def test_network_features_sum_over_layers():
+    l1 = ConvLayerSpec(n=4, m=3, k=3, padding=1, ip=8)
+    l2 = ConvLayerSpec(n=8, m=4, k=3, padding=1, ip=8)
+    net12 = NetworkSpec("a", (l1, l2))
+    f1 = network_features(NetworkSpec("l1", (l1,)), 2)
+    f2 = network_features(NetworkSpec("l2", (l2,)), 2)
+    np.testing.assert_allclose(network_features(net12, 2), f1 + f2)
+
+
+layer_strategy = st.builds(
+    ConvLayerSpec,
+    n=st.integers(1, 64),
+    m=st.integers(1, 64),
+    k=st.sampled_from([1, 3, 5, 7]),
+    stride=st.integers(1, 2),
+    padding=st.integers(0, 3),
+    groups=st.just(1),
+    ip=st.integers(8, 64),
+)
+
+
+@given(l=layer_strategy, bs=st.integers(1, 64))
+@settings(max_examples=60, deadline=None)
+def test_features_nonnegative_finite(l, bs):
+    f = layer_features(l, bs)
+    v = np.array(list(f.values()))
+    assert np.all(np.isfinite(v))
+    assert np.all(v >= 0)
+
+
+@given(l=layer_strategy, bs=st.integers(1, 32))
+@settings(max_examples=40, deadline=None)
+def test_features_monotone_in_batch_size(l, bs):
+    """More batch ⇒ no feature shrinks (weights are bs-independent)."""
+    f1 = np.array(list(layer_features(l, bs).values()))
+    f2 = np.array(list(layer_features(l, bs + 1).values()))
+    assert np.all(f2 >= f1)
+
+
+@given(l=layer_strategy, bs=st.integers(1, 32), extra=st.integers(1, 32))
+@settings(max_examples=40, deadline=None)
+def test_features_monotone_in_filters(l, bs, extra):
+    """More filters ⇒ every memory/op term is >= (pruning shrinks features)."""
+    import dataclasses
+
+    bigger = dataclasses.replace(l, n=l.n + extra)
+    f1 = np.array(list(layer_features(l, bs).values()))
+    f2 = np.array(list(layer_features(bigger, bs).values()))
+    assert np.all(f2 >= f1)

@@ -1,0 +1,76 @@
+"""HLO cost parser: trip-count-aware FLOPs/bytes/collectives."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_cost import parse_hlo_cost
+from repro.core.roofline import model_flops_for_cell
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+
+
+def _cost(fn, *args):
+    return parse_hlo_cost(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_single_dot_exact():
+    x = jnp.zeros((128, 64))
+    w = jnp.zeros((64, 32))
+    c = _cost(lambda x, w: x @ w, x, w)
+    assert c.flops == 2 * 128 * 64 * 32
+
+
+def test_scan_multiplies_by_trip_count():
+    x = jnp.zeros((64, 64))
+    ws = jnp.zeros((12, 64, 64))
+
+    def f(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    c = _cost(f, x, ws)
+    assert c.flops == 12 * 2 * 64**3
+    assert 12 in c.trip_counts.values()
+
+
+def test_grad_of_scan_counts_forward_and_backward():
+    x = jnp.zeros((32, 32))
+    ws = jnp.zeros((5, 32, 32))
+
+    def loss(ws, x):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0].sum()
+
+    c = _cost(jax.grad(loss), ws, x)
+    # fwd 5 + bwd 2×5 dots
+    assert c.flops == pytest.approx(15 * 2 * 32**3, rel=0.01)
+
+
+def test_batch_dot_flops():
+    a = jnp.zeros((4, 16, 24))
+    b = jnp.zeros((4, 24, 8))
+    c = _cost(lambda a, b: jnp.einsum("bik,bkj->bij", a, b), a, b)
+    assert c.flops == 2 * 4 * 16 * 24 * 8
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jnp.zeros((1024, 1024), jnp.float32)
+    c = _cost(lambda x: x * 2 + 1, x)
+    # read + write ≈ 8 MB; allow fusion-dependent slack
+    assert 4e6 < c.hbm_bytes < 3e7
+
+
+def test_model_flops_for_cell_train_vs_decode():
+    cfg = get_config("qwen3-4b")
+    train = model_flops_for_cell(cfg, SHAPES["train_4k"])
+    decode = model_flops_for_cell(cfg, SHAPES["decode_32k"])
+    assert train / decode > 1e4  # 6·N·T vs 2·N·B
+    n = cfg.param_count()
+    assert train == pytest.approx(6 * n * SHAPES["train_4k"].tokens, rel=1e-6)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert cfg.param_count(active_only=True) < 0.2 * cfg.param_count()
+    # ~30B total / ~3B active (plus embeddings)
+    assert 25e9 < cfg.param_count() < 35e9

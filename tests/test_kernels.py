@@ -1,0 +1,177 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.conv_mm.kernel import conv_mm_kernel
+from repro.kernels.conv_mm.ref import conv_im2col_ref, conv_ref
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssm_scan.kernel import ssd_chunk_kernel
+from repro.kernels.ssm_scan.ops import ssd
+from repro.kernels.ssm_scan.ref import ssd_naive, ssd_ref
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4), jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_SHAPES = [
+    # (B, H, Hkv, Sq, Sk, Dh, causal, block_q, block_k)
+    (1, 2, 2, 128, 128, 32, True, 64, 64),
+    (2, 4, 2, 128, 128, 64, True, 64, 64),      # GQA 2:1
+    (2, 8, 1, 64, 64, 32, True, 32, 32),        # MQA
+    (1, 2, 2, 128, 128, 32, False, 64, 64),     # bidirectional
+    (1, 2, 1, 64, 256, 32, True, 64, 64),       # Sk > Sq (decode-ish)
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("spec", FLASH_SHAPES)
+def test_flash_attention_matches_ref(spec, dtype):
+    B, H, Hkv, Sq, Sk, Dh, causal, bq, bk = spec
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (B, H, Sq, Dh), dtype)
+    k = _rand(rng, (B, Hkv, Sk, Dh), dtype)
+    v = _rand(rng, (B, Hkv, Sk, Dh), dtype)
+    q_offset = Sk - Sq  # align last q with last k
+    out = flash_attention_kernel(
+        q, k, v, causal=causal, block_q=bq, block_k=bk,
+        q_offset=q_offset, interpret=True,
+    )
+    ref = attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), **TOL[dtype]
+    )
+
+
+def test_flash_attention_decode_single_query():
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (2, 4, 8, 64), jnp.float32)  # block_q=8 (padded decode)
+    k = _rand(rng, (2, 2, 128, 64), jnp.float32)
+    v = _rand(rng, (2, 2, 128, 64), jnp.float32)
+    out = flash_attention_kernel(q, k, v, causal=True, q_offset=120,
+                                 block_q=8, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, q_offset=120)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv_mm
+# ---------------------------------------------------------------------------
+
+CONV_SHAPES = [
+    # (N, H, W, C, KH, O, stride, padding)
+    (2, 8, 8, 8, 3, 16, 1, 1),
+    (1, 16, 16, 4, 3, 8, 2, 1),
+    (2, 8, 8, 16, 1, 32, 1, 0),     # 1x1 conv
+    (1, 9, 9, 8, 5, 8, 2, 2),       # 5x5 stride 2
+    (2, 8, 8, 3, 3, 8, 1, 0),       # valid padding
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("spec", CONV_SHAPES)
+def test_conv_mm_matches_xla(spec, dtype):
+    N, H, W, C, K, O, s, p = spec
+    rng = np.random.default_rng(2)
+    x = _rand(rng, (N, H, W, C), dtype)
+    w = _rand(rng, (K, K, C, O), dtype) * 0.2
+    out = conv_mm_kernel(x, w, stride=s, padding=p, block_o=O, interpret=True)
+    ref = conv_ref(x, w, stride=s, padding=p)
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), **TOL[dtype]
+    )
+
+
+def test_conv_im2col_ref_matches_xla():
+    """The paper's materialising im2col variant equals the XLA conv."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (2, 10, 10, 6), jnp.float32)
+    w = _rand(rng, (3, 3, 6, 12), jnp.float32)
+    np.testing.assert_allclose(
+        conv_im2col_ref(x, w, stride=1, padding=1),
+        conv_ref(x, w, stride=1, padding=1), rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_conv_mm_output_channel_tiling():
+    rng = np.random.default_rng(4)
+    x = _rand(rng, (1, 8, 8, 4), jnp.float32)
+    w = _rand(rng, (3, 3, 4, 32), jnp.float32)
+    out = conv_mm_kernel(x, w, stride=1, padding=1, block_o=8, interpret=True)
+    ref = conv_ref(x, w, stride=1, padding=1)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm (SSD)
+# ---------------------------------------------------------------------------
+
+SSD_SHAPES = [
+    # (B, S, H, P, N, chunk)
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 4, 32, 32, 32),
+    (1, 96, 1, 8, 64, 32),
+]
+
+
+def _ssd_inputs(rng, B, S, H, P, N, dtype=jnp.float32):
+    xh = _rand(rng, (B, S, H, P), dtype) * 0.5
+    a = -jnp.abs(_rand(rng, (B, S, H), jnp.float32)) * 0.3  # log-decays < 0
+    Bm = _rand(rng, (B, S, N), dtype) * 0.5
+    Cm = _rand(rng, (B, S, N), dtype) * 0.5
+    return xh, a, Bm, Cm
+
+
+@pytest.mark.parametrize("spec", SSD_SHAPES)
+def test_ssd_kernel_matches_chunked_ref(spec):
+    B, S, H, P, N, chunk = spec
+    rng = np.random.default_rng(5)
+    xh, a, Bm, Cm = _ssd_inputs(rng, B, S, H, P, N)
+    y, st = ssd(xh, a, Bm, Cm, chunk=chunk, interpret=True)
+    y_ref, st_ref = ssd_ref(xh, a, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(st, st_ref, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunked_ref_matches_naive_recurrence():
+    """The chunked SSD algorithm equals the token-by-token SSM recurrence."""
+    rng = np.random.default_rng(6)
+    xh, a, Bm, Cm = _ssd_inputs(rng, 1, 32, 2, 8, 8)
+    y_ref, st_ref = ssd_ref(xh, a, Bm, Cm, chunk=8)
+    y_naive, st_naive = ssd_naive(xh, a, Bm, Cm)
+    np.testing.assert_allclose(y_ref, y_naive, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st_ref, st_naive, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_initial_state_continuation():
+    """Splitting a sequence in half and passing the state must equal the
+    full-sequence scan (prefill→decode correctness)."""
+    rng = np.random.default_rng(7)
+    xh, a, Bm, Cm = _ssd_inputs(rng, 1, 64, 2, 8, 16)
+    y_full, st_full = ssd_ref(xh, a, Bm, Cm, chunk=16)
+    y1, st1 = ssd_ref(xh[:, :32], a[:, :32], Bm[:, :32], Cm[:, :32], chunk=16)
+    y2, st2 = ssd_ref(xh[:, 32:], a[:, 32:], Bm[:, 32:], Cm[:, 32:], chunk=16,
+                      initial_state=st1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st2, st_full, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_bf16_tolerance():
+    rng = np.random.default_rng(8)
+    xh, a, Bm, Cm = _ssd_inputs(rng, 1, 64, 2, 16, 16, jnp.bfloat16)
+    y, st = ssd(xh, a, Bm, Cm, chunk=16, interpret=True)
+    y_ref, st_ref = ssd_ref(xh, a, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(y.astype(np.float32), y_ref.astype(np.float32),
+                               rtol=5e-2, atol=5e-2)

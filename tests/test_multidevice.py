@@ -1,0 +1,139 @@
+"""Multi-device behaviour tests, run in subprocesses with forced host
+devices (the flag must never leak into this process — see dryrun.py note)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600, cwd=ROOT,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.configs.registry import get_config
+        from repro.configs.base import ShapeSpec
+        from repro.models import transformer as T
+        from repro.distributed import sharding as sh
+        from repro.launch.mesh import make_mesh
+        from repro.models import layers as L
+
+        cfg = get_config("internlm2-1.8b", reduced=True)
+        shape = ShapeSpec("t", 32, 8, "train")
+        params = T.init_params(cfg, 0)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": rng.integers(0, cfg.vocab, (8, 32)).astype(np.int32)}
+
+        # single-device reference
+        l_ref, _ = jax.jit(lambda p, b: T.loss_fn(p, b, cfg))(params, batch)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        L.set_hint_mesh(mesh)
+        pspec = sh.param_pspecs(cfg, mesh)
+        bspec = sh.batch_pspecs(cfg, shape, mesh)
+        fn = jax.jit(lambda p, b: T.loss_fn(p, b, cfg)[0],
+                     in_shardings=(sh.to_named(mesh, pspec), sh.to_named(mesh, bspec)))
+        with mesh:
+            l_sh = fn(params, batch)
+        err = abs(float(l_ref) - float(l_sh)) / abs(float(l_ref))
+        assert err < 2e-2, (float(l_ref), float(l_sh))
+        print("OK", float(l_ref), float(l_sh))
+    """)
+
+
+def test_moe_arch_sharded_matches():
+    _run("""
+        import numpy as np, jax, dataclasses
+        from repro.configs.registry import get_config
+        from repro.configs.base import ShapeSpec
+        from repro.models import transformer as T
+        from repro.distributed import sharding as sh
+        from repro.launch.mesh import make_mesh
+        from repro.models import layers as L
+
+        cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b", reduced=True),
+                                  capacity_factor=8.0)
+        shape = ShapeSpec("t", 16, 4, "train")
+        params = T.init_params(cfg, 0)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": rng.integers(0, cfg.vocab, (4, 16)).astype(np.int32)}
+        l_ref, _ = jax.jit(lambda p, b: T.loss_fn(p, b, cfg))(params, batch)
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        L.set_hint_mesh(mesh)
+        fn = jax.jit(lambda p, b: T.loss_fn(p, b, cfg)[0],
+                     in_shardings=(sh.to_named(mesh, sh.param_pspecs(cfg, mesh)),
+                                   sh.to_named(mesh, sh.batch_pspecs(cfg, shape, mesh))))
+        with mesh:
+            l_sh = fn(params, batch)
+        err = abs(float(l_ref) - float(l_sh)) / abs(float(l_ref))
+        assert err < 2e-2, (float(l_ref), float(l_sh))
+        print("OK")
+    """)
+
+
+def test_pipeline_parallel_matches_sequential():
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.distributed.pipeline_parallel import pipeline_apply, bubble_fraction
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((4,), ("pipe",))
+        n_stages, n_micro, mb, d = 4, 8, 2, 16
+        rng = np.random.default_rng(0)
+        ws = jnp.asarray(rng.standard_normal((n_stages, d, d)) * 0.3, jnp.float32)
+        x = jnp.asarray(rng.standard_normal((n_micro, mb, d)), jnp.float32)
+
+        def stage_fn(w, h):
+            return jnp.tanh(h @ w)
+
+        out = pipeline_apply(stage_fn, ws, x, mesh)
+
+        ref = x
+        for s in range(n_stages):
+            ref = jax.vmap(lambda h: stage_fn(ws[s], h))(ref)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        assert abs(bubble_fraction(4, 8) - 3/11) < 1e-9
+        print("OK")
+    """)
+
+
+def test_elastic_checkpoint_restore_different_mesh(tmp_path):
+    _run(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.mesh import make_mesh
+        from repro.train import checkpoint as ckpt
+
+        d = {str(tmp_path)!r}
+        state = {{"w": np.arange(64, dtype=np.float32).reshape(8, 8)}}
+        mesh1 = make_mesh((4, 2), ("data", "model"))
+        sharded = jax.device_put(state["w"], NamedSharding(mesh1, P("data", "model")))
+        ckpt.save_checkpoint(d, 3, {{"w": sharded}})
+
+        mesh2 = make_mesh((2, 4), ("data", "model"))
+        step, restored = ckpt.restore_checkpoint(
+            d, template=state,
+            shardings={{"w": NamedSharding(mesh2, P("data", "model"))}})
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+        assert restored["w"].sharding.mesh.devices.shape == (2, 4)
+        print("OK")
+    """)

@@ -1,0 +1,93 @@
+"""Predictor integration: fit/predict/evaluate/save/admit on synthetic and
+real profiled data (the paper's core loop at miniature scale)."""
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import Datapoint
+from repro.core.features import network_features
+from repro.core.predictor import EvalReport, Perf4Sight, mape
+from repro.core.pruning import pruned_model
+
+
+def _synthetic_dps(n=60, seed=0):
+    """Datapoints whose targets are smooth functions of real features."""
+    rng = np.random.default_rng(seed)
+    dps = []
+    for i in range(n):
+        level = float(rng.uniform(0, 0.9))
+        bs = int(rng.integers(2, 33))
+        m = pruned_model("squeezenet", level, "uniform", seed=0,
+                         width_mult=0.25, input_hw=16)
+        f = network_features(m.conv_specs(), bs)
+        gamma = 5.0 + f[4] / 1e5          # alloc-total driven
+        phi = 2.0 + f[14] / 1e7           # ops-sum driven
+        dps.append(Datapoint(
+            family="squeezenet", level=level, strategy="uniform", bs=bs,
+            width_mult=0.25, input_hw=16, seed=0,
+            gamma_mb=gamma, phi_ms=phi, features=[float(v) for v in f]))
+    return dps
+
+
+def test_fit_predict_on_feature_driven_targets():
+    dps = _synthetic_dps()
+    model = Perf4Sight(n_estimators=60).fit(dps[:45])
+    rep = model.evaluate(dps[45:])
+    assert isinstance(rep, EvalReport)
+    assert rep.gamma_mape < 0.10
+    assert rep.phi_mape < 0.15
+
+
+def test_predict_spec_path():
+    dps = _synthetic_dps()
+    model = Perf4Sight(n_estimators=40).fit(dps)
+    m = pruned_model("squeezenet", 0.45, "uniform", width_mult=0.25, input_hw=16)
+    g, p = model.predict(m.conv_specs(), 8)
+    assert g > 0 and p > 0
+
+
+def test_admission_gate_budgets():
+    dps = _synthetic_dps()
+    model = Perf4Sight(n_estimators=40).fit(dps)
+    m = pruned_model("squeezenet", 0.3, "uniform", width_mult=0.25, input_hw=16)
+    spec = m.conv_specs()
+    ok, info = model.admit(spec, 8, gamma_budget_mb=1e9)
+    assert ok
+    ok, info = model.admit(spec, 8, gamma_budget_mb=1e-3)
+    assert not ok
+    assert info["gamma_eff"] > info["gamma_mb"]  # safety margin applied
+
+
+def test_save_load_roundtrip(tmp_path):
+    dps = _synthetic_dps(40)
+    model = Perf4Sight(n_estimators=20).fit(dps)
+    p = str(tmp_path / "model.json")
+    model.save(p)
+    loaded = Perf4Sight.load(p)
+    m = pruned_model("squeezenet", 0.5, "uniform", width_mult=0.25, input_hw=16)
+    assert loaded.predict(m.conv_specs(), 16) == model.predict(m.conv_specs(), 16)
+
+
+def test_mape_metric():
+    assert mape(np.array([110.0]), np.array([100.0])) == pytest.approx(0.1)
+    assert mape(np.array([0.0]), np.array([0.0])) == 0.0
+
+
+@pytest.mark.slow
+def test_end_to_end_profile_fit_predict():
+    """The paper's actual loop: profile real training steps, fit, predict an
+    unseen topology within tolerance (small grid ⇒ loose bound)."""
+    from repro.core.dataset import DatasetCache, GridSpec, collect_grid
+    from repro.core.profiler import profile_training
+
+    cache = DatasetCache("benchmarks/cache/cnn_profile.json")
+    grid = GridSpec("squeezenet", (0.0, 0.3, 0.5, 0.7, 0.9), "random", (2, 8, 16, 32))
+    dps = collect_grid(grid, cache)
+    cache.flush()
+    model = Perf4Sight(n_estimators=100).fit(dps)
+    m = pruned_model("squeezenet", 0.4, "random", seed=3,
+                     width_mult=0.25, input_hw=16)
+    res = profile_training(m, 16)
+    g, p = model.predict(m.conv_specs(), 16)
+    assert abs(g - res.gamma_mb) / res.gamma_mb < 0.35
+    assert abs(p - res.phi_ms) / res.phi_ms < 0.60

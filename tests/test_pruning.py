@@ -1,0 +1,90 @@
+"""Structured-pruning invariants (paper §5.1, §6.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pruning import (
+    l1_scores,
+    prune_widths,
+    pruned_model,
+    random_profile_widths,
+)
+from repro.models.cnn import CNN_BUILDERS, canonical_widths
+
+
+def test_level_zero_is_identity():
+    w = canonical_widths("resnet18", 0.5)
+    assert prune_widths(w, 0.0, "random") == w
+
+
+@pytest.mark.parametrize("strategy", ["random", "uniform", "early", "middle", "late"])
+def test_total_filters_close_to_level(strategy):
+    w = canonical_widths("resnet18", 1.0)
+    total = sum(w.values())
+    rng = np.random.default_rng(0)
+    kept = prune_widths(w, 0.5, strategy, rng)
+    frac = sum(kept.values()) / total
+    assert 0.42 <= frac <= 0.58, f"{strategy}: kept {frac}"
+
+
+def test_l1_prunes_globally_smallest():
+    w = {"a": 4, "b": 4}
+    scores = {"a": np.array([0.1, 0.2, 10, 11]), "b": np.array([5, 6, 7, 8])}
+    kept = prune_widths(w, 0.25, "l1", scores=scores)
+    assert kept == {"a": 2, "b": 4}  # the two smallest live in group a
+
+
+def test_l1_scores_cover_all_groups():
+    m = CNN_BUILDERS["mobilenetv2"](width_mult=0.25)
+    scores = l1_scores(m)
+    for g, n in m.widths.items():
+        assert g in scores and len(scores[g]) == n
+
+
+def test_position_profiles_differ():
+    w = canonical_widths("resnet18", 0.5)
+    rng = np.random.default_rng(0)
+    early = prune_widths(w, 0.5, "early", rng)
+    late = prune_widths(w, 0.5, "late", np.random.default_rng(0))
+    groups = list(w)
+    first = groups[: len(groups) // 3]
+    assert sum(early[g] for g in first) < sum(late[g] for g in first)
+
+
+@given(level=st.floats(0.05, 0.9), seed=st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_pruned_widths_valid(level, seed):
+    w = canonical_widths("squeezenet", 0.5)
+    kept = prune_widths(w, level, "random", np.random.default_rng(seed), min_ch=2)
+    assert set(kept) == set(w)
+    for g in w:
+        assert 2 <= kept[g] <= w[g]
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_random_profile_widths_valid(seed):
+    w = canonical_widths("resnet18", 0.5)
+    kept = random_profile_widths(w, 0.5, np.random.default_rng(seed))
+    for g in w:
+        assert 2 <= kept[g] <= w[g]
+
+
+def test_pruned_model_builds_and_extracts_specs():
+    m = pruned_model("mnasnet", 0.7, "random", width_mult=0.25, input_hw=16)
+    spec = m.conv_specs()
+    base = CNN_BUILDERS["mnasnet"](width_mult=0.25, input_hw=16).conv_specs()
+    assert len(spec.layers) == len(base.layers)
+    assert m.num_params() < CNN_BUILDERS["mnasnet"](width_mult=0.25).num_params()
+
+
+def test_pruned_features_shrink():
+    from repro.core.features import network_features
+
+    base = CNN_BUILDERS["resnet18"](width_mult=0.5)
+    pruned = pruned_model("resnet18", 0.5, "uniform", width_mult=0.5)
+    fb = network_features(base.conv_specs(), 8)
+    fp = network_features(pruned.conv_specs(), 8)
+    assert np.all(fp <= fb + 1e-9)
+    assert fp.sum() < fb.sum()

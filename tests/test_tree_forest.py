@@ -1,0 +1,134 @@
+"""Tests for the CART tree and random-forest regressors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.forest import RandomForestRegressor
+from repro.core.tree import RegressionTree
+
+
+def test_tree_fits_step_function_exactly():
+    X = np.linspace(0, 1, 100).reshape(-1, 1)
+    y = (X[:, 0] > 0.5).astype(float) * 10.0
+    t = RegressionTree().fit(X, y)
+    np.testing.assert_allclose(t.predict(X), y)
+
+
+def test_tree_constant_target_is_single_leaf():
+    X = np.random.default_rng(0).normal(size=(50, 3))
+    y = np.full(50, 7.0)
+    t = RegressionTree().fit(X, y)
+    assert t.node_count == 1
+    np.testing.assert_allclose(t.predict(X), 7.0)
+
+
+def test_tree_respects_max_depth():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(200, 4))
+    y = rng.normal(size=200)
+    t = RegressionTree(max_depth=3).fit(X, y)
+    assert t.depth <= 3
+
+
+def test_tree_respects_min_samples_leaf():
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(64, 2))
+    y = rng.normal(size=64)
+    t = RegressionTree(min_samples_leaf=10).fit(X, y)
+    leaf_sizes = [n.n_samples for n in t._nodes if n.feature == -1]
+    assert min(leaf_sizes) >= 10
+
+
+def test_tree_piecewise_linear_fit_quality():
+    """Deep tree approximates a smooth function well in-sample."""
+    X = np.linspace(0, 2 * np.pi, 500).reshape(-1, 1)
+    y = np.sin(X[:, 0])
+    t = RegressionTree(min_samples_leaf=2).fit(X, y)
+    assert np.mean((t.predict(X) - y) ** 2) < 1e-3
+
+
+def test_forest_interpolates_linear_in_range():
+    """Paper App. B: attributes are linear in batch size — the forest must
+    capture that well within the profiled range."""
+    rng = np.random.default_rng(3)
+    bs = rng.uniform(2, 256, size=300)
+    X = bs.reshape(-1, 1)
+    y = 3.5 * bs + 120.0
+    f = RandomForestRegressor(n_estimators=50, min_samples_leaf=1, seed=0).fit(X, y)
+    test_bs = np.linspace(10, 250, 40).reshape(-1, 1)
+    pred = f.predict(test_bs)
+    err = np.abs(pred - (3.5 * test_bs[:, 0] + 120)) / (3.5 * test_bs[:, 0] + 120)
+    assert err.mean() < 0.03
+
+
+def test_forest_predictions_within_target_range():
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(200, 5))
+    y = rng.uniform(10, 20, size=200)
+    f = RandomForestRegressor(n_estimators=20, seed=1).fit(X, y)
+    pred = f.predict(rng.normal(size=(100, 5)) * 10)
+    assert np.all(pred >= y.min() - 1e-9) and np.all(pred <= y.max() + 1e-9)
+
+
+def test_forest_feature_importance_identifies_signal():
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(300, 6))
+    y = 10 * X[:, 2] + 0.01 * rng.normal(size=300)
+    f = RandomForestRegressor(n_estimators=30, max_features=None, seed=2).fit(X, y)
+    assert int(np.argmax(f.feature_importances_)) == 2
+    assert f.feature_importances_[2] > 0.9
+
+
+def test_forest_oob_error_reported():
+    rng = np.random.default_rng(6)
+    X = rng.uniform(0, 1, size=(150, 3))
+    y = X @ np.array([1.0, 2.0, 3.0]) + 5
+    f = RandomForestRegressor(n_estimators=40, seed=3).fit(X, y)
+    assert f.oob_mape_ is not None and f.oob_mape_ < 0.2
+
+
+def test_forest_serialisation_roundtrip():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(100, 4))
+    y = X[:, 0] ** 2 + X[:, 1]
+    f = RandomForestRegressor(n_estimators=10, seed=4).fit(X, y)
+    f2 = RandomForestRegressor.from_dict(f.to_dict())
+    np.testing.assert_allclose(f2.predict(X), f.predict(X))
+
+
+def test_forest_deterministic_given_seed():
+    rng = np.random.default_rng(8)
+    X = rng.normal(size=(80, 3))
+    y = rng.normal(size=80)
+    p1 = RandomForestRegressor(n_estimators=10, seed=5).fit(X, y).predict(X)
+    p2 = RandomForestRegressor(n_estimators=10, seed=5).fit(X, y).predict(X)
+    np.testing.assert_array_equal(p1, p2)
+
+
+@given(
+    n=st.integers(10, 80),
+    d=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None)
+def test_tree_in_sample_never_worse_than_mean_predictor(n, d, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    y = rng.normal(size=n)
+    t = RegressionTree(min_samples_leaf=1).fit(X, y)
+    sse_tree = np.sum((t.predict(X) - y) ** 2)
+    sse_mean = np.sum((y - y.mean()) ** 2)
+    assert sse_tree <= sse_mean + 1e-9
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_forest_prediction_bounded_by_training_extremes(seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(60, 4))
+    y = rng.normal(size=60)
+    f = RandomForestRegressor(n_estimators=8, seed=seed).fit(X, y)
+    pred = f.predict(rng.normal(size=(30, 4)) * 5)
+    assert pred.min() >= y.min() - 1e-9
+    assert pred.max() <= y.max() + 1e-9
