@@ -1,0 +1,114 @@
+"""Engine benchmark: batched CostBackend.estimate vs per-candidate scalar
+prediction, on a search-shaped workload (acceptance check for the unified
+engine: ≥5× on a 100-candidate population).
+
+Both paths do identical work per candidate — feature extraction + forest
+prediction for (Γ, Φ) — but the batched path builds ONE feature matrix
+(vectorized over every layer of every candidate) and walks the packed
+forest once, while the scalar path pays N Python round-trips.  Also
+reports the on-disk estimate cache hit path (second population visit).
+
+    PYTHONPATH=src python -m benchmarks.engine_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dataset import Datapoint
+from repro.core.features import network_features
+from repro.core.predictor import Perf4Sight
+from repro.core.search import sample_subnetwork
+from repro.engine import CostEngine, CostQuery, EstimateCache, ForestBackend
+from repro.models.cnn import build_resnet50
+
+from .common import csv_line
+
+POPULATION = 100
+BS = 16
+WM, HW = 0.25, 16
+
+
+def _fitted_predictor(n_points: int = 60, seed: int = 0) -> Perf4Sight:
+    """Fit on synthetic feature-driven targets (no profiling needed — this
+    bench measures prediction throughput, not accuracy)."""
+    from repro.core.pruning import pruned_model
+
+    rng = np.random.default_rng(seed)
+    dps = []
+    for _ in range(n_points):
+        level = float(rng.uniform(0, 0.9))
+        bs = int(rng.integers(2, 33))
+        m = pruned_model("resnet50", level, "uniform", seed=0,
+                         width_mult=WM, input_hw=HW)
+        f = network_features(m.conv_specs(), bs)
+        dps.append(Datapoint(
+            family="resnet50", level=level, strategy="uniform", bs=bs,
+            width_mult=WM, input_hw=HW, seed=0,
+            gamma_mb=5.0 + f[4] / 1e5, phi_ms=2.0 + f[14] / 1e7,
+            features=[float(v) for v in f]))
+    return Perf4Sight(n_estimators=100).fit(dps)
+
+
+def run(print_fn=print, population: int = POPULATION, repeats: int = 3) -> dict:
+    predictor = _fitted_predictor()
+    base = build_resnet50(width_mult=WM, input_hw=HW)
+    rng = np.random.default_rng(1)
+    specs = [
+        build_resnet50(widths=sample_subnetwork(base.widths, rng),
+                       input_hw=HW).conv_specs()
+        for _ in range(population)
+    ]
+    queries = [CostQuery(spec=s, bs=BS, stage="train") for s in specs]
+    backend = ForestBackend(train=predictor)
+
+    # warm both paths (forest packing, numpy dispatch)
+    backend.estimate(queries[:2])
+    predictor.predict(specs[0], BS)
+
+    t_batch = min(
+        _timed(lambda: backend.estimate(queries)) for _ in range(repeats))
+    t_scalar = min(
+        _timed(lambda: [predictor.predict(s, BS) for s in specs])
+        for _ in range(repeats))
+    speedup = t_scalar / t_batch
+
+    # parity: the batched path must agree with the scalar path exactly
+    ests = backend.estimate(queries)
+    scalar = [predictor.predict(s, BS) for s in specs]
+    max_dev = max(
+        max(abs(e.gamma_mb - g), abs(e.phi_ms - p))
+        for e, (g, p) in zip(ests, scalar))
+
+    # cache path: second visit to the same population is pure dict lookups
+    cache_path = "/tmp/perf4sight_engine_bench_cache.json"
+    import os
+    if os.path.exists(cache_path):
+        os.unlink(cache_path)
+    engine = CostEngine(backend, cache=EstimateCache(cache_path))
+    engine.estimate(queries)
+    t_cached = _timed(lambda: engine.estimate(queries))
+
+    print_fn(csv_line("engine/scalar_ms_per_100", t_scalar * 1e3,
+                      f"pop={population}"))
+    print_fn(csv_line("engine/batched_ms_per_100", t_batch * 1e3,
+                      f"speedup={speedup:.1f}x"))
+    print_fn(csv_line("engine/cached_ms_per_100", t_cached * 1e3,
+                      f"hits={engine.hits}"))
+    print_fn(csv_line("engine/parity_max_abs_dev", max_dev, "expect=0"))
+    return {"speedup": speedup, "t_scalar_s": t_scalar, "t_batch_s": t_batch,
+            "t_cached_s": t_cached, "max_dev": max_dev}
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"\nbatched speedup: {out['speedup']:.1f}x "
+          f"(target >=5x on {POPULATION} candidates)")

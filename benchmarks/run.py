@@ -23,9 +23,9 @@ def main() -> None:
                     help="skip benches that may profile new configs")
     args = ap.parse_args()
 
-    from . import (dnnmem_comparison, fig3_same_network, fig4_basis,
-                   kernel_bench, roofline_table, strategy_variation,
-                   table2_case_study, trainset_sweep)
+    from . import (dnnmem_comparison, engine_bench, fig3_same_network,
+                   fig4_basis, kernel_bench, roofline_table,
+                   strategy_variation, table2_case_study, trainset_sweep)
 
     benches = {
         "fig3": fig3_same_network.run,            # Fig. 3
@@ -36,6 +36,7 @@ def main() -> None:
         "table2": table2_case_study.run,          # Table 2 / §6.4
         "roofline": roofline_table.run,           # §Roofline (beyond paper)
         "kernels": kernel_bench.run,              # kernel μ-bench
+        "engine": engine_bench.run,               # batched CostBackend API
     }
     slow = {"strategies", "table2"}
     selected = (args.only.split(",") if args.only else list(benches))

@@ -16,6 +16,7 @@ from repro.core import pruning as pr
 from repro.core.dataset import DEFAULT_TRAIN_LEVELS, Datapoint
 from repro.core.features import network_features
 from repro.core.profiler import profile_training
+from repro.engine import CostQuery, ForestBackend
 from repro.models.cnn import build_mobilenetv2
 
 from .common import cache, csv_line, fit_predictor, grid_points
@@ -41,7 +42,7 @@ def run(print_fn=print) -> dict:
     model = fit_predictor(train)
 
     base = build_mobilenetv2(width_mult=WM, input_hw=HW)
-    gammas, phis, errs_g, errs_p = [], [], [], []
+    gammas, phis, specs = [], [], []
     for i in range(N_STRATEGIES):
         rng = np.random.default_rng(1000 + i)
         widths = _strategy_widths(base.widths, i, rng)
@@ -59,11 +60,15 @@ def run(print_fn=print) -> dict:
             c.put(key)
             c.flush()
             hit = key
-        pg, pp = model.predict(m.conv_specs(), BS)
+        specs.append(m.conv_specs())
         gammas.append(hit.gamma_mb)
         phis.append(hit.phi_ms)
-        errs_g.append(abs(pg - hit.gamma_mb) / hit.gamma_mb)
-        errs_p.append(abs(pp - hit.phi_ms) / hit.phi_ms)
+
+    # one batched engine call for all strategies (no scalar round-trips)
+    ests = ForestBackend(train=model).estimate(
+        [CostQuery(spec=s, bs=BS, stage="train") for s in specs])
+    errs_g = [abs(e.gamma_mb - g) / g for e, g in zip(ests, gammas)]
+    errs_p = [abs(e.phi_ms - p) / p for e, p in zip(ests, phis)]
 
     out = {
         "gamma_mean": float(np.mean(gammas)), "gamma_std": float(np.std(gammas)),

@@ -119,7 +119,7 @@ def run(print_fn=print) -> dict:
                "train_gamma_subnet_err": g_sub_err}
     for name, cons in tiers.items():
         r = evolutionary_search(
-            "resnet50", gamma_model, infer_model, cons,
+            "resnet50", (gamma_model, infer_model), cons,
             population=32, iterations=40, width_mult=WM, input_hw=HW, seed=0)
         evals_s = r.evaluations / max(r.search_time_s, 1e-9)
         naive_s = r.evaluations * mean_profile_s

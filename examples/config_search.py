@@ -14,6 +14,7 @@ from repro.core.features import network_features
 from repro.core.predictor import Perf4Sight
 from repro.core.profiler import profile_inference, profile_training
 from repro.core.search import Constraints, evolutionary_search, sample_subnetwork
+from repro.engine import CostEngine, ForestBackend
 from repro.models.cnn import build_resnet50
 
 WM, HW = 0.25, 16
@@ -48,9 +49,14 @@ def main() -> None:
     print(f"searching under Γ≤{cons.gamma_mb}MB γ≤{cons.gamma_inf_mb}MB "
           f"φ≤{cons.phi_inf_ms}ms ...")
     t0 = time.time()
-    r = evolutionary_search("resnet50", gamma_model, infer_model, cons,
+    engine = CostEngine(ForestBackend(train=gamma_model, infer=infer_model),
+                        cache="benchmarks/cache/estimates.json",
+                        flush_every=512)  # amortize writes in the hot loop
+    r = evolutionary_search("resnet50", engine, cons,
                             population=32, iterations=30,
                             width_mult=WM, input_hw=HW)
+    engine.flush()
+    print(f"  engine cache: {engine.hits} hits / {engine.misses} misses")
     print(f"  {r.evaluations} candidates in {time.time() - t0:.1f}s "
           f"({r.evaluations / (time.time() - t0):.0f} evals/s)")
     print(f"  best: {int(r.fitness)} filters kept, predicted "

@@ -18,14 +18,12 @@ fleet).
 
 from __future__ import annotations
 
-import json
-import os
-import tempfile
 from dataclasses import asdict, dataclass, field
 
 import numpy as np
 
 from repro.core import pruning as pr
+from repro.core.fileio import atomic_write_json, load_json_tolerant
 from repro.core.features import network_features
 from repro.core.profiler import profile_training
 from repro.models.cnn import CNN_BUILDERS
@@ -103,14 +101,18 @@ def default_grid(family: str, *, full: bool = False) -> list[GridSpec]:
 
 
 class DatasetCache:
-    """JSON-file cache of profiled datapoints, write-atomic and append-only."""
+    """JSON-file cache of profiled datapoints, write-atomic and append-only.
+
+    Writes go to a tempfile in the target directory, are fsync'd, then
+    ``os.replace``d over the cache — an interrupted collection run can never
+    leave a truncated cache behind.  A corrupt cache file (e.g. written by a
+    pre-atomic version, or a torn disk) is quarantined to ``<path>.corrupt``
+    and collection restarts from empty instead of crashing the run.
+    """
 
     def __init__(self, path: str):
         self.path = path
-        self._data: dict[str, dict] = {}
-        if os.path.exists(path):
-            with open(path) as f:
-                self._data = json.load(f)
+        self._data: dict[str, dict] = load_json_tolerant(path)
 
     def get(self, key: str) -> Datapoint | None:
         d = self._data.get(key)
@@ -120,11 +122,7 @@ class DatasetCache:
         self._data[dp.key] = asdict(dp)
 
     def flush(self) -> None:
-        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path) or ".")
-        with os.fdopen(fd, "w") as f:
-            json.dump(self._data, f)
-        os.replace(tmp, self.path)  # atomic on POSIX
+        atomic_write_json(self.path, self._data)
 
     def __len__(self) -> int:
         return len(self._data)

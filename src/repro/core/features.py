@@ -43,6 +43,7 @@ __all__ = [
     "layer_features",
     "network_features",
     "feature_matrix",
+    "batch_network_features",
 ]
 
 # Winograd (q, r) output-tile / filter-tap sizes most used by cuDNN (paper
@@ -266,6 +267,158 @@ def network_features(net: NetworkSpec, bs: int, qr_mode: str = "sum") -> np.ndar
     return acc
 
 
+# ---------------------------------------------------------------------------
+# Vectorized batch path.  The scalar functions above are the reference
+# implementation (hand-checked against Appendix B in tests); the batch path
+# computes the same formulas over flat numpy arrays covering every layer of
+# every datapoint at once, then segment-sums per datapoint.  This is what
+# makes population-scale prediction (engine.ForestBackend, core/search.py)
+# fast: one array program instead of N_python round-trips.
+# ---------------------------------------------------------------------------
+
+
+def _vlog(v: np.ndarray) -> np.ndarray:
+    # vectorized twin of _log: natural log, 0 for v <= 1
+    return np.where(v > 1, np.log(np.maximum(v, 1.0)), 0.0)
+
+
+def _batch_layer_features(cols: dict[str, np.ndarray], qr_mode: str) -> dict[str, np.ndarray]:
+    """All Appendix-B features for a flat array of layers (one row each)."""
+    n, m, g, ip, op, k, bs = (cols[c] for c in ("n", "m", "g", "ip", "op", "k", "bs"))
+    mpg = m / g
+    k2, ip2, op2 = k * k, ip * ip, op * op
+    f: dict[str, np.ndarray] = {}
+
+    # App. B.2.1 tensor allocations
+    f["mem_w"] = n * mpg * k2
+    f["mem_w_grad"] = bs * n * mpg * k2
+    f["mem_ifm_grad"] = bs * m * ip2
+    f["mem_ofm_grad"] = bs * n * op2
+    f["mem_alloc_total"] = f["mem_w"] + f["mem_w_grad"] + f["mem_ifm_grad"] + f["mem_ofm_grad"]
+
+    # App. B.2.2 im2col / matmul
+    i2c_fwd_total = bs * op2 * k2 * m
+    i2c_bwdw_total = bs * op2 * k2 * mpg
+    i2c_fwd_index = bs * op2
+    i2c_bwdx_total = bs * ip2 * k2 * m
+    i2c_bwdx_index = bs * ip2
+    ops_fwd = bs * n * op2 * k2 * mpg
+    ops_bwdx = bs * m * ip2 * k2 * n
+    f["mm_i2c_fwd_total"] = i2c_fwd_total
+    f["mm_i2c_bwdw_total"] = i2c_bwdw_total
+    f["mm_i2c_fwd_index"] = i2c_fwd_index
+    f["mm_i2c_bwdx_total"] = i2c_bwdx_total
+    f["mm_i2c_bwdx_index"] = i2c_bwdx_index
+    f["mm_i2c_total_sum"] = i2c_fwd_total + i2c_bwdx_total + i2c_bwdw_total
+    f["mm_i2c_index_sum"] = 2 * i2c_fwd_index + i2c_bwdx_index
+    f["mm_ops_fwd"] = ops_fwd
+    f["mm_ops_bwdx"] = ops_bwdx
+    f["mm_ops_sum"] = 2 * ops_fwd + ops_bwdx
+
+    # App. B.2.3 FFT
+    w_fwd = n * mpg * ip * (1 + ip)
+    ifm_fwd = bs * m * ip * (1 + ip)
+    ofm_bwdw = bs * n * ip * (1 + ip)
+    w_bwdx = n * mpg * op * (1 + op)
+    ofm_bwdx = bs * n * op * (1 + op)
+    s21 = w_fwd + ifm_fwd
+    s22 = ofm_bwdx + w_bwdx
+    s23 = ofm_bwdw + ifm_fwd
+    common = bs * (m + n) + n * mpg
+    fft_ops_fwd = ip2 * _vlog(ip) * common + bs * n * m * ip2
+    fft_ops_bwdx = op2 * _vlog(op) * common + bs * n * m * op2
+    fft_ops_bwdw = ip * _vlog(ip2) * common + bs * n * m * ip2
+    f["fft_w_fwd"] = w_fwd
+    f["fft_ifm_fwd"] = ifm_fwd
+    f["fft_ofm_bwdw"] = ofm_bwdw
+    f["fft_w_bwdx"] = w_bwdx
+    f["fft_ofm_bwdx"] = ofm_bwdx
+    f["fft_mem_fwd_sum"] = s21
+    f["fft_mem_bwdx_sum"] = s22
+    f["fft_mem_bwdw_sum"] = s23
+    f["fft_mem_total"] = s21 + s22 + s23
+    f["fft_ops_fwd"] = fft_ops_fwd
+    f["fft_ops_bwdx"] = fft_ops_bwdx
+    f["fft_ops_bwdw"] = fft_ops_bwdw
+    f["fft_ops_sum"] = fft_ops_fwd + fft_ops_bwdx + fft_ops_bwdw
+
+    # App. B.2.4 Winograd, per (q, r) instantiation
+    per_qr: list[dict[str, np.ndarray]] = []
+    for q, r in WINOGRAD_QR:
+        tiles_ip = np.ceil(ip / q) ** 2
+        tiles_op = np.ceil(op / q) ** 2
+        tiles_k = np.ceil(k / r) ** 2
+        tiles_op_r = np.ceil(op / r) ** 2
+        had = (q + r - 1) ** 2
+        mem_fwd = bs * n * tiles_ip * 3 * had
+        mem_bwdx = bs * m * tiles_op * 3 * had
+        mem_bwdw = bs * n * mpg * tiles_ip * 3 * had
+        wops_fwd = bs * n * mpg * tiles_ip * tiles_k * had
+        wops_bwdx = bs * m * n * tiles_op * tiles_k * had
+        wops_bwdw = bs * n * mpg * mpg * tiles_ip * tiles_op_r * had
+        s32 = mem_fwd + mem_bwdx
+        s33 = mem_fwd + mem_bwdw
+        s34 = mem_bwdw + mem_bwdx
+        s39 = wops_fwd + wops_bwdx
+        s40 = wops_fwd + wops_bwdw
+        s41 = wops_bwdx + wops_bwdw
+        per_qr.append({
+            "wino_mem_fwd": mem_fwd,
+            "wino_mem_bwdx": mem_bwdx,
+            "wino_mem_bwdw": mem_bwdw,
+            "wino_mem_fwd_bwdx": s32,
+            "wino_mem_fwd_bwdw": s33,
+            "wino_mem_bwdw_bwdx": s34,
+            "wino_mem_total": s32 + s33 + s34,
+            "wino_ops_fwd": wops_fwd,
+            "wino_ops_bwdx": wops_bwdx,
+            "wino_ops_bwdw": wops_bwdw,
+            "wino_ops_fwd_bwdx": s39,
+            "wino_ops_fwd_bwdw": s40,
+            "wino_ops_bwdx_bwdw": s41,
+            "wino_ops_total": s39 + s40 + s41,
+        })
+    if qr_mode == "sum":
+        for key in per_qr[0]:
+            f[key] = sum(d[key] for d in per_qr)
+    elif qr_mode == "concat":
+        for (q, r), d in zip(WINOGRAD_QR, per_qr):
+            for key, v in d.items():
+                f[f"{key}_q{q}r{r}"] = v
+    else:
+        raise ValueError(f"unknown qr_mode {qr_mode!r}")
+    return f
+
+
+def batch_network_features(
+    nets_and_bs: list[tuple[NetworkSpec, int]], qr_mode: str = "sum"
+) -> np.ndarray:
+    """Feature matrix (N, F) for N (network, batch size) datapoints in one
+    vectorized pass: flatten every layer of every network into flat arrays,
+    evaluate all Appendix-B formulas once, segment-sum per network."""
+    names = FEATURE_NAMES if qr_mode == "sum" else FEATURE_NAMES_CONCAT
+    out = np.zeros((len(nets_and_bs), len(names)), dtype=np.float64)
+    if not nets_and_bs:
+        return out
+    seg, rows = [], {c: [] for c in ("n", "m", "g", "ip", "op", "k", "bs")}
+    for i, (net, bs) in enumerate(nets_and_bs):
+        for l in net.layers:
+            seg.append(i)
+            rows["n"].append(l.n)
+            rows["m"].append(l.m)
+            rows["g"].append(l.groups)
+            rows["ip"].append(l.ip)
+            rows["op"].append(l.op)
+            rows["k"].append(l.k)
+            rows["bs"].append(bs)
+    cols = {c: np.asarray(v, dtype=np.float64) for c, v in rows.items()}
+    f = _batch_layer_features(cols, qr_mode)
+    per_layer = np.stack([f[k] for k in names], axis=1)      # (L_total, F)
+    np.add.at(out, np.asarray(seg), per_layer)
+    return out
+
+
 def feature_matrix(nets_and_bs: list[tuple[NetworkSpec, int]], qr_mode: str = "sum") -> np.ndarray:
-    """Stack feature vectors for a list of (network, batch size) datapoints."""
-    return np.stack([network_features(n, b, qr_mode) for n, b in nets_and_bs])
+    """Stack feature vectors for a list of (network, batch size) datapoints
+    (vectorized — see batch_network_features)."""
+    return batch_network_features(nets_and_bs, qr_mode)

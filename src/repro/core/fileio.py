@@ -1,0 +1,58 @@
+"""Shared atomic-file idioms for the on-disk caches and model files.
+
+Every persistent artifact in this repo (profiling cache, estimate cache,
+fitted predictors) follows the same contract: writes go to a tempfile in
+the target directory, are fsync'd, then ``os.replace``d over the target —
+an interrupted run can never leave a truncated file; and a corrupt file
+(pre-atomic writer, torn disk) is quarantined to ``<path>.corrupt`` so the
+caller restarts from empty instead of crashing.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Callable
+
+__all__ = ["load_json_tolerant", "atomic_write_json", "atomic_write_bytes"]
+
+
+def load_json_tolerant(path: str) -> dict:
+    """Load a JSON dict; quarantine an unreadable/corrupt file and return {}."""
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError, OSError):
+        try:
+            os.replace(path, path + ".corrupt")
+        except OSError:
+            pass
+        return {}
+
+
+def _atomic_write(path: str, mode: str, write_fn: Callable, suffix: str = "") -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=suffix)
+    try:
+        with os.fdopen(fd, mode) as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic on POSIX
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def atomic_write_json(path: str, obj) -> None:
+    _atomic_write(path, "w", lambda f: json.dump(obj, f))
+
+
+def atomic_write_bytes(path: str, write_fn: Callable, suffix: str = "") -> None:
+    """Atomic binary write; ``write_fn(file)`` produces the content (e.g.
+    ``lambda f: np.savez_compressed(f, **arrays)``)."""
+    _atomic_write(path, "wb", write_fn, suffix=suffix)

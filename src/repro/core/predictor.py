@@ -11,13 +11,13 @@ safety-critical motivation (§1, §6.4), promoted to a first-class feature.
 from __future__ import annotations
 
 import json
-import os
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.dataset import Datapoint, features_targets
-from repro.core.features import NetworkSpec, network_features
+from repro.core.features import NetworkSpec, feature_matrix, network_features
+from repro.core.fileio import atomic_write_bytes, atomic_write_json
 from repro.core.forest import RandomForestRegressor
 
 __all__ = ["Perf4Sight", "EvalReport", "mape"]
@@ -95,6 +95,41 @@ class HybridRegressor:
         self.forest = RandomForestRegressor.from_dict(d["forest"])
         return self
 
+    def content_hash(self) -> str:
+        import hashlib
+
+        mu, sd, w, b = self._lin
+        h = hashlib.sha1()
+        for a in (mu, sd, w):
+            h.update(np.ascontiguousarray(a).tobytes())
+        h.update(np.float64(b).tobytes())
+        h.update(self.forest.content_hash().encode())
+        return h.hexdigest()
+
+    def to_arrays(self, prefix: str = "") -> dict:
+        mu, sd, w, b = self._lin
+        out = {
+            prefix + "lin_mu": mu,
+            prefix + "lin_sd": sd,
+            prefix + "lin_w": w,
+            prefix + "lin_b": np.array([b, self.alpha]),
+        }
+        out.update(self.forest.to_arrays(prefix + "forest_"))
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays, prefix: str = "") -> "HybridRegressor":
+        b_alpha = np.asarray(arrays[prefix + "lin_b"], dtype=np.float64)
+        self = cls(alpha=float(b_alpha[1]))
+        self._lin = (
+            np.asarray(arrays[prefix + "lin_mu"], dtype=np.float64),
+            np.asarray(arrays[prefix + "lin_sd"], dtype=np.float64),
+            np.asarray(arrays[prefix + "lin_w"], dtype=np.float64),
+            float(b_alpha[0]),
+        )
+        self.forest = RandomForestRegressor.from_arrays(arrays, prefix + "forest_")
+        return self
+
 
 class Perf4Sight:
     """Two regressors (Γ memory MB, Φ latency ms) over the 42 features —
@@ -149,6 +184,27 @@ class Perf4Sight:
         g, p = self.predict_features(x)
         return float(g[0]), float(p[0])
 
+    def content_hash(self) -> str:
+        """Hash of both fitted models — salts engine cache keys so estimates
+        from differently-fitted predictors never alias on disk."""
+        import hashlib
+
+        h = hashlib.sha1()
+        h.update(self.gamma_model.content_hash().encode())
+        h.update(self.phi_model.content_hash().encode())
+        return h.hexdigest()
+
+    def predict_batch(
+        self, specs_and_bs: list[tuple[NetworkSpec, int]]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched (Γ, Φ) for N (spec, batch size) candidates: one vectorized
+        feature-matrix build + one forest traversal per attribute, instead of
+        N scalar round-trips (the engine/search fast path)."""
+        if not specs_and_bs:
+            return np.zeros(0), np.zeros(0)
+        X = feature_matrix(specs_and_bs)
+        return self.predict_features(X)
+
     def evaluate(self, datapoints: list[Datapoint]) -> EvalReport:
         X, g, p = features_targets(datapoints)
         pg, pp = self.predict_features(X)
@@ -177,20 +233,45 @@ class Perf4Sight:
         return ok, {"gamma_mb": g, "phi_ms": p, "gamma_eff": g_eff, "phi_eff": p_eff}
 
     # -- persistence -----------------------------------------------------------
+    #
+    # Two formats, chosen by extension, so fitted forests round-trip between
+    # processes (search jobs load once instead of refitting):
+    #   *.json — nested tree dicts (human-inspectable, the original format)
+    #   *.npz  — packed flat arrays (compact; production-size forests)
+    # Both writes are atomic (tempfile in the target dir + os.replace).
 
     def save(self, path: str) -> None:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        blob = {"gamma": self.gamma_model.to_dict(), "phi": self.phi_model.to_dict()}
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(blob, f)
-        os.replace(tmp, path)
+        if path.endswith(".npz"):
+            arrays: dict[str, np.ndarray] = {}
+            for prefix, model in (("gamma_", self.gamma_model),
+                                  ("phi_", self.phi_model)):
+                arrays[prefix + "hybrid"] = np.array(
+                    [1.0 if isinstance(model, HybridRegressor) else 0.0])
+                arrays.update(model.to_arrays(prefix))
+            atomic_write_bytes(path, lambda f: np.savez_compressed(f, **arrays),
+                               suffix=".npz")
+            return
+        atomic_write_json(path, {"gamma": self.gamma_model.to_dict(),
+                                 "phi": self.phi_model.to_dict()})
 
     @classmethod
     def load(cls, path: str) -> "Perf4Sight":
+        self = cls()
+        if path.endswith(".npz"):
+            with np.load(path) as arrays:
+                models = {}
+                for prefix in ("gamma_", "phi_"):
+                    if float(arrays[prefix + "hybrid"][0]):
+                        models[prefix] = HybridRegressor.from_arrays(arrays, prefix)
+                    else:
+                        models[prefix] = RandomForestRegressor.from_arrays(
+                            arrays, prefix)
+            self.gamma_model = models["gamma_"]
+            self.phi_model = models["phi_"]
+            self.fitted = True
+            return self
         with open(path) as f:
             blob = json.load(f)
-        self = cls()
         loader = (
             lambda d: HybridRegressor.from_dict(d) if d.get("hybrid")
             else RandomForestRegressor.from_dict(d)

@@ -7,6 +7,13 @@ per sample on-device (11 days for 50 000 samples) and risks OOM-killing
 co-located safety-critical processes; the perf4sight predictor costs ~0.1 s
 on CPU (1.4 h) — a ~200× search-time gain.
 
+Since the engine refactor the search talks to the unified
+:class:`~repro.engine.CostBackend` API and evaluates WHOLE POPULATIONS in
+one batched ``estimate`` call per stage: one vectorized feature-matrix
+build + one packed forest traversal for all N candidates, instead of N
+scalar predictor round-trips per generation (≥5× on a 100-candidate
+population; see benchmarks/engine_bench.py).
+
 Here the search space is the pruned-topology space of a base CNN (the
 reproduction analogue of OFA sub-network sampling: per-group keep ratios
 define a sub-network of the unpruned super-network).  Fitness is total kept
@@ -25,7 +32,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.predictor import Perf4Sight
+from repro.engine.engine import CostEngine
+from repro.engine.types import STAGE_INFER, STAGE_TRAIN, CostQuery
 from repro.models.cnn import CNN_BUILDERS
 
 __all__ = ["Constraints", "SearchResult", "evolutionary_search", "sample_subnetwork"]
@@ -80,10 +88,28 @@ def _crossover(a: dict[str, int], b: dict[str, int], rng: np.random.Generator) -
     return {g: (a[g] if rng.random() < 0.5 else b[g]) for g in a}
 
 
+def _as_engine(backend) -> CostEngine:
+    """Accept a CostEngine, any CostBackend, or (train, infer) Perf4Sight
+    predictors (the pre-engine calling convention)."""
+    if isinstance(backend, CostEngine):
+        return backend
+    if isinstance(backend, tuple):
+        from repro.engine.backends import ForestBackend
+
+        train, infer = backend
+        return CostEngine(ForestBackend(train=train, infer=infer))
+    from repro.core.predictor import Perf4Sight
+
+    if isinstance(backend, Perf4Sight):
+        from repro.engine.backends import ForestBackend
+
+        return CostEngine(ForestBackend(train=backend, infer=backend))
+    return CostEngine(backend)
+
+
 def evolutionary_search(
     family: str,
-    predictor_train: Perf4Sight,
-    predictor_infer: Perf4Sight,
+    backend,
     constraints: Constraints,
     *,
     population: int = 100,
@@ -95,31 +121,50 @@ def evolutionary_search(
     seed: int = 0,
 ) -> SearchResult:
     """Paper §6.4 ES: population of sub-networks, constraint-checked via the
-    predictors, evolved toward maximum capacity within budget."""
+    cost engine, evolved toward maximum capacity within budget.
+
+    ``backend`` is a :class:`~repro.engine.CostEngine`, any
+    :class:`~repro.engine.CostBackend`, or a ``(predictor_train,
+    predictor_infer)`` tuple of fitted :class:`Perf4Sight` models.  Every
+    generation is scored with ONE batched ``estimate`` call per stage.
+    """
+    engine = _as_engine(backend)
     rng = np.random.default_rng(seed)
     build = CNN_BUILDERS[family]
     canonical = build(width_mult=width_mult, input_hw=input_hw).widths
     t0 = time.perf_counter()
     evaluations = 0
 
-    def evaluate(widths: dict[str, int]) -> tuple[float, float, float, float]:
-        """fitness (-inf if constraints violated), Γ, γ, φ."""
+    def evaluate_population(
+        widths_list: list[dict[str, int]],
+    ) -> list[tuple[float, float, float, float]]:
+        """Batched: (fitness (-inf if constraints violated), Γ, γ, φ) per
+        candidate, from two engine calls covering the whole population."""
         nonlocal evaluations
-        evaluations += 1
-        model = build(widths=widths, input_hw=input_hw)
-        spec = model.conv_specs()
-        g_train, _ = predictor_train.predict(spec, constraints.train_bs)
-        g_inf, p_inf = predictor_infer.predict(spec, constraints.infer_bs)
-        ok = (
-            (constraints.gamma_mb is None or g_train <= constraints.gamma_mb)
-            and (constraints.gamma_inf_mb is None or g_inf <= constraints.gamma_inf_mb)
-            and (constraints.phi_inf_ms is None or p_inf <= constraints.phi_inf_ms)
-        )
-        fitness = float(sum(widths.values())) if ok else -np.inf
-        return fitness, g_train, g_inf, p_inf
+        evaluations += len(widths_list)
+        specs = [
+            build(widths=w, input_hw=input_hw).conv_specs() for w in widths_list
+        ]
+        est_t = engine.estimate(
+            [CostQuery(spec=s, bs=constraints.train_bs, stage=STAGE_TRAIN)
+             for s in specs])
+        est_i = engine.estimate(
+            [CostQuery(spec=s, bs=constraints.infer_bs, stage=STAGE_INFER)
+             for s in specs])
+        out = []
+        for w, et, ei in zip(widths_list, est_t, est_i):
+            g_train, g_inf, p_inf = et.gamma_mb, ei.gamma_mb, ei.phi_ms
+            ok = (
+                (constraints.gamma_mb is None or g_train <= constraints.gamma_mb)
+                and (constraints.gamma_inf_mb is None or g_inf <= constraints.gamma_inf_mb)
+                and (constraints.phi_inf_ms is None or p_inf <= constraints.phi_inf_ms)
+            )
+            fitness = float(sum(w.values())) if ok else -np.inf
+            out.append((fitness, g_train, g_inf, p_inf))
+        return out
 
     pop = [sample_subnetwork(canonical, rng) for _ in range(population)]
-    scored = [(evaluate(w), w) for w in pop]
+    scored = list(zip(evaluate_population(pop), pop))
     history = []
     n_parents = max(2, int(parent_frac * population))
     for _ in range(iterations):
@@ -134,7 +179,7 @@ def evolutionary_search(
                 a, b = rng.choice(len(parents), 2, replace=False)
                 child = _crossover(parents[a], parents[b], rng)
             children.append(child)
-        scored = scored[:n_parents] + [(evaluate(w), w) for w in children]
+        scored = scored[:n_parents] + list(zip(evaluate_population(children), children))
 
     scored.sort(key=lambda sw: sw[0][0], reverse=True)
     (fitness, g_t, g_i, p_i), best = scored[0]

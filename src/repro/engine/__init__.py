@@ -1,0 +1,41 @@
+"""Unified cost-prediction engine (see docs/engine.md).
+
+One batched, cacheable API — ``CostBackend.estimate(queries) ->
+CostEstimate[]`` — over the three cost paths this repo grew separately:
+the fitted perf4sight forest, the HLO/roofline analytical model, and the
+ground-truth profiler.
+"""
+
+from repro.engine.backends import (
+    HOST_CPU,
+    AnalyticalBackend,
+    EnsembleBackend,
+    ForestBackend,
+    ProfilerBackend,
+)
+from repro.engine.cache import EstimateCache
+from repro.engine.engine import CostEngine
+from repro.engine.types import (
+    STAGE_INFER,
+    STAGE_TRAIN,
+    BackendUnavailable,
+    CostBackend,
+    CostEstimate,
+    CostQuery,
+)
+
+__all__ = [
+    "AnalyticalBackend",
+    "BackendUnavailable",
+    "CostBackend",
+    "CostEngine",
+    "CostEstimate",
+    "CostQuery",
+    "EnsembleBackend",
+    "EstimateCache",
+    "ForestBackend",
+    "HOST_CPU",
+    "ProfilerBackend",
+    "STAGE_INFER",
+    "STAGE_TRAIN",
+]

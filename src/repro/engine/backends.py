@@ -1,0 +1,323 @@
+"""CostBackend implementations.
+
+Three ways to answer the same question, in decreasing accuracy and
+increasing speed of setup:
+
+* :class:`ProfilerBackend`   — ground truth: compile + run the real step.
+* :class:`AnalyticalBackend` — no fitting, no execution: roofline over the
+  trip-count-aware HLO cost for LM cells, Appendix-B closed forms for CNNs.
+* :class:`ForestBackend`     — the fitted perf4sight predictor; microseconds
+  per query once fitted, fully batched.
+
+:class:`EnsembleBackend` chains them (forest → analytical → profiler by
+convention): each query is answered by the first backend in the chain that
+supports it and succeeds, so a search job transparently degrades from
+"fitted forest" to "analytical" to "measure it" instead of crashing.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.features import FEATURE_NAMES, feature_matrix
+from repro.core.predictor import Perf4Sight
+from repro.engine.types import (
+    STAGE_INFER,
+    STAGE_TRAIN,
+    BackendUnavailable,
+    CostEstimate,
+    CostQuery,
+)
+
+__all__ = [
+    "ForestBackend",
+    "AnalyticalBackend",
+    "ProfilerBackend",
+    "EnsembleBackend",
+    "HOST_CPU",
+]
+
+# Roofline constants for the profiling host (1-core CPU stand-in for the
+# edge device; see DESIGN notes in core/profiler.py).  Deliberately coarse:
+# the analytical backend is a fallback ranker, not a calibrated model.
+HOST_CPU = {
+    "peak_flops_bf16": 5e10,   # FLOP/s
+    "hbm_bw": 2e10,            # B/s
+    "ici_bw": 1e9,             # B/s (loopback; collectives are degenerate)
+    "hbm_bytes": 4e9,
+}
+
+
+class ForestBackend:
+    """Batched prediction through fitted :class:`Perf4Sight` models, one per
+    stage.  N queries cost one feature-matrix build + one packed forest
+    traversal per attribute — the engine's hot path."""
+
+    name = "forest"
+
+    def __init__(self, train: Perf4Sight | None = None,
+                 infer: Perf4Sight | None = None):
+        self.predictors = {STAGE_TRAIN: train, STAGE_INFER: infer}
+
+    def _predictor(self, stage: str) -> Perf4Sight | None:
+        p = self.predictors.get(stage)
+        return p if (p is not None and p.fitted) else None
+
+    def cache_salt(self) -> str:
+        """Content hash of the fitted models: a refit predictor invalidates
+        on-disk estimates instead of silently serving stale ones."""
+        parts = []
+        for stage in (STAGE_TRAIN, STAGE_INFER):
+            p = self._predictor(stage)
+            parts.append(p.content_hash() if p is not None else "-")
+        return f"{self.name}:" + ":".join(parts)
+
+    def supports(self, query: CostQuery) -> bool:
+        return query.spec is not None and self._predictor(query.stage) is not None
+
+    def estimate(self, queries: list[CostQuery]) -> list[CostEstimate]:
+        results: list[CostEstimate | None] = [None] * len(queries)
+        by_stage: dict[str, list[int]] = {}
+        for i, q in enumerate(queries):
+            if not self.supports(q):
+                raise BackendUnavailable(f"forest backend cannot answer {q}")
+            by_stage.setdefault(q.stage, []).append(i)
+        for stage, idx in by_stage.items():
+            predictor = self._predictor(stage)
+            g, p = predictor.predict_batch(
+                [(queries[i].spec, queries[i].bs) for i in idx])
+            for j, i in enumerate(idx):
+                results[i] = CostEstimate(
+                    gamma_mb=float(g[j]), phi_ms=float(p[j]), source=self.name)
+        return results
+
+
+class AnalyticalBackend:
+    """No-fit estimates.
+
+    CNN conv-spec queries use the Appendix-B closed forms directly: Γ from
+    the algorithm-independent tensor allocations, Φ from a roofline over the
+    im2col op count and allocation traffic.  LM arch queries AOT-compile the
+    real step (no execution) and run the trip-count-aware HLO cost parse
+    through the roofline terms — the same machinery as core/roofline.py.
+    """
+
+    name = "analytical"
+
+    def __init__(self, hw: dict | None = None, lm_hw: dict | None = None,
+                 reduced: bool = True, bytes_per_el: int = 4):
+        self.hw = hw or HOST_CPU
+        self.lm_hw = lm_hw      # None → launch.mesh.TPU_V5E, resolved lazily
+        self.reduced = reduced
+        self.bytes_per_el = bytes_per_el
+        self._compiled_cache: dict[tuple, CostEstimate] = {}
+        self._i_alloc = FEATURE_NAMES.index("mem_alloc_total")
+        self._i_ops = FEATURE_NAMES.index("mm_ops_sum")
+        self._i_ops_fwd = FEATURE_NAMES.index("mm_ops_fwd")
+        self._i_i2c = FEATURE_NAMES.index("mm_i2c_total_sum")
+
+    def cache_salt(self) -> str:
+        hw = sorted(self.hw.items())
+        lm = sorted(self.lm_hw.items()) if self.lm_hw else "tpu_v5e"
+        return f"{self.name}:{self.reduced}:{self.bytes_per_el}:{hw}:{lm}"
+
+    def supports(self, query: CostQuery) -> bool:
+        return query.spec is not None or query.arch is not None
+
+    def estimate(self, queries: list[CostQuery]) -> list[CostEstimate]:
+        results: list[CostEstimate | None] = [None] * len(queries)
+        spec_idx = [i for i, q in enumerate(queries) if q.spec is not None]
+        arch_idx = [i for i, q in enumerate(queries)
+                    if q.spec is None and q.arch is not None]
+        if len(spec_idx) + len(arch_idx) != len(queries):
+            raise BackendUnavailable("analytical backend cannot answer model-only queries")
+        if spec_idx:
+            X = feature_matrix([(queries[i].spec, queries[i].bs) for i in spec_idx])
+            for j, i in enumerate(spec_idx):
+                results[i] = self._estimate_spec(queries[i], X[j])
+        for i in arch_idx:
+            results[i] = self._estimate_arch(queries[i])
+        return results
+
+    # -- CNN closed-form path -------------------------------------------------
+
+    def _estimate_spec(self, q: CostQuery, feats: np.ndarray) -> CostEstimate:
+        # Γ: element count of weights/grads/activation-grads (App. B.2.1).
+        # Inference allocates no gradient buffers: approximate with the
+        # weight + activation terms only (~alloc_total minus the grad terms
+        # isn't directly a feature, so scale by the fwd/total op ratio).
+        alloc = feats[self._i_alloc]
+        ops = feats[self._i_ops]          # MAC count, fwd+bwd (train)
+        i2c = feats[self._i_i2c]
+        if q.stage == STAGE_INFER:
+            alloc = alloc / 3.0           # drop bwd_w / bwd_x buffers
+            ops = feats[self._i_ops_fwd]
+            i2c = i2c / 3.0
+        gamma_mb = self.bytes_per_el * alloc / 1e6
+        compute_s = 2.0 * ops / self.hw["peak_flops_bf16"]
+        memory_s = self.bytes_per_el * (alloc + i2c) / self.hw["hbm_bw"]
+        phi_ms = max(compute_s, memory_s) * 1e3
+        return CostEstimate(
+            gamma_mb=float(gamma_mb), phi_ms=float(phi_ms), source=self.name,
+            detail={"compute_s": float(compute_s), "memory_s": float(memory_s),
+                    "dominant": "compute" if compute_s >= memory_s else "memory"})
+
+    # -- LM HLO/roofline path -------------------------------------------------
+
+    def _estimate_arch(self, q: CostQuery) -> CostEstimate:
+        key = (q.arch, q.stage, q.bs, q.seq, self.reduced)
+        if key in self._compiled_cache:
+            return self._compiled_cache[key]
+        try:
+            est = self._compile_arch(q)
+        except BackendUnavailable:
+            raise
+        except Exception as e:  # compile/lowering failure → fall through chain
+            raise BackendUnavailable(
+                f"analytical compile failed for {q.arch}: {e}") from e
+        self._compiled_cache[key] = est
+        return est
+
+    def _compile_arch(self, q: CostQuery) -> CostEstimate:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs.base import ShapeSpec
+        from repro.configs.registry import get_config
+        from repro.core.hlo_cost import parse_hlo_cost
+        from repro.core.profiler import memory_analysis_bytes
+        from repro.launch.mesh import TPU_V5E
+        from repro.models import transformer as T
+        from repro.optim.optimizer import OptimizerConfig, apply_updates
+
+        hw = self.lm_hw or TPU_V5E
+        cfg = get_config(q.arch, reduced=self.reduced)
+        kind = "train" if q.stage == STAGE_TRAIN else "prefill"
+        shape = ShapeSpec("engine", q.seq, q.bs, kind)
+        t0 = time.perf_counter()
+        specs = T.input_specs(cfg, shape)
+        if kind == "train":
+            opt_cfg = OptimizerConfig()
+            f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+            pspecs = specs["params"]
+            opt_specs = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                         "m": jax.tree.map(f32, pspecs),
+                         "v": jax.tree.map(f32, pspecs)}
+
+            def step(state, batch):
+                (l, _), g = jax.value_and_grad(T.loss_fn, has_aux=True)(
+                    state["params"], batch, cfg)
+                p2, o2, _ = apply_updates(state["params"], g, state["opt"], opt_cfg)
+                return {"params": p2, "opt": o2}, l
+
+            compiled = jax.jit(step).lower(
+                {"params": pspecs, "opt": opt_specs}, specs["batch"]).compile()
+        else:
+            max_len = q.seq + cfg.n_prefix
+
+            def fwd(params, batch):
+                return T.prefill(params, batch, cfg, max_len=max_len)
+
+            compiled = jax.jit(fwd).lower(specs["params"], specs["batch"]).compile()
+        compile_s = time.perf_counter() - t0
+
+        mb = memory_analysis_bytes(compiled)
+        gamma_mb = (mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6
+        cost = parse_hlo_cost(compiled.as_text())
+        compute_s = cost.flops / hw["peak_flops_bf16"]
+        memory_s = cost.hbm_bytes / hw["hbm_bw"]
+        coll_s = cost.collective_bytes / hw["ici_bw"]
+        phi_ms = max(compute_s, memory_s, coll_s) * 1e3
+        terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+        return CostEstimate(
+            gamma_mb=float(gamma_mb), phi_ms=float(phi_ms), source=self.name,
+            detail={"flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
+                    "collective_bytes": cost.collective_bytes,
+                    "dominant": max(terms, key=terms.get),
+                    "compile_s": compile_s, "reduced": self.reduced})
+
+
+class ProfilerBackend:
+    """Ground truth: compile and run the real training/inference step for a
+    concrete built model.  Inherently per-query (each candidate is its own
+    executable); used for calibration and as the last link of the ensemble
+    chain."""
+
+    name = "profiler"
+
+    def __init__(self, repeats: int = 2, warmup: int = 1, run: bool = True):
+        self.repeats = repeats
+        self.warmup = warmup
+        self.run = run
+
+    def cache_salt(self) -> str:
+        return f"{self.name}:{self.repeats}:{self.warmup}:{self.run}"
+
+    def supports(self, query: CostQuery) -> bool:
+        return query.model is not None
+
+    def estimate(self, queries: list[CostQuery]) -> list[CostEstimate]:
+        from repro.core.profiler import profile_inference, profile_training
+
+        out = []
+        for q in queries:
+            if q.model is None:
+                raise BackendUnavailable("profiler backend needs a built model")
+            prof = profile_training if q.stage == STAGE_TRAIN else profile_inference
+            res = prof(q.model, q.bs, repeats=self.repeats, warmup=self.warmup,
+                       run=self.run)
+            out.append(CostEstimate(
+                gamma_mb=res.gamma_mb, phi_ms=res.phi_ms, source=self.name,
+                detail={"compile_s": res.compile_s, "flops": res.flops,
+                        "temp_mb": res.temp_mb}))
+        return out
+
+
+class EnsembleBackend:
+    """Fallback chain: each query is answered by the first backend that
+    supports it and succeeds.  A backend failing with
+    :class:`BackendUnavailable` drops out for that batch only; remaining
+    queries flow to the next link."""
+
+    name = "ensemble"
+
+    def __init__(self, backends: list):
+        if not backends:
+            raise ValueError("empty backend chain")
+        self.backends = list(backends)
+
+    def cache_salt(self) -> str:
+        salts = [getattr(b, "cache_salt", lambda: b.name)() for b in self.backends]
+        return f"{self.name}:[" + "|".join(salts) + "]"
+
+    def supports(self, query: CostQuery) -> bool:
+        return any(b.supports(query) for b in self.backends)
+
+    def estimate(self, queries: list[CostQuery]) -> list[CostEstimate]:
+        results: list[CostEstimate | None] = [None] * len(queries)
+        remaining = list(range(len(queries)))
+        failures: list[str] = []
+        last_exc: BackendUnavailable | None = None
+        for backend in self.backends:
+            if not remaining:
+                break
+            idx = [i for i in remaining if backend.supports(queries[i])]
+            if not idx:
+                continue
+            try:
+                ests = backend.estimate([queries[i] for i in idx])
+            except BackendUnavailable as e:
+                failures.append(f"{backend.name}: {e}")
+                last_exc = e
+                continue
+            for i, est in zip(idx, ests):
+                results[i] = est
+            remaining = [i for i in remaining if results[i] is None]
+        if remaining:
+            why = ("; ".join(failures)) if failures else "no backend supports them"
+            raise BackendUnavailable(
+                f"no backend in {[b.name for b in self.backends]} could answer "
+                f"{len(remaining)}/{len(queries)} queries ({why})") from last_exc
+        return results

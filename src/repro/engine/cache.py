@@ -1,0 +1,38 @@
+"""Content-keyed on-disk cache of cost estimates.
+
+Same idiom as ``core/dataset.py``'s profiling cache: one JSON file, loaded
+eagerly, written atomically (tempfile in the target directory + fsync +
+``os.replace``), tolerant of a corrupt file left by earlier non-atomic
+writers.  Keys are :meth:`CostQuery.key` content hashes, so estimates are
+shared across processes, runs, and differently-named specs with identical
+geometry.
+"""
+
+from __future__ import annotations
+
+from repro.core.fileio import atomic_write_json, load_json_tolerant
+from repro.engine.types import CostEstimate
+
+__all__ = ["EstimateCache"]
+
+
+class EstimateCache:
+    def __init__(self, path: str):
+        self.path = path
+        self._data: dict[str, dict] = load_json_tolerant(path)
+
+    def get(self, key: str) -> CostEstimate | None:
+        d = self._data.get(key)
+        return CostEstimate.from_dict(d) if d else None
+
+    def put(self, key: str, est: CostEstimate) -> None:
+        self._data[key] = est.to_dict()
+
+    def flush(self) -> None:
+        atomic_write_json(self.path, self._data)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._data

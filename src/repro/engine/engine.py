@@ -1,0 +1,115 @@
+"""The cost engine: one batched, cacheable prediction front door.
+
+``CostEngine`` wraps any :class:`CostBackend` (usually an
+:class:`~repro.engine.backends.EnsembleBackend` chain) with a content-keyed
+on-disk estimate cache and an admission helper.  Consumers — the
+evolutionary search, the training launcher, benchmarks — talk only to this
+class; which backend answered, and whether it came from cache, is carried
+in each estimate's ``source`` / ``detail``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+from repro.engine.cache import EstimateCache
+from repro.engine.types import CostBackend, CostEstimate, CostQuery
+
+__all__ = ["CostEngine"]
+
+
+class CostEngine:
+    """Cache-first front door over a backend.
+
+    Cache keys are the query's content hash salted with the backend's
+    ``cache_salt()`` (fitted-model content hash, hardware table, reduced
+    flag, …), so estimates from a refit predictor or a different backend
+    configuration never alias on disk.
+
+    ``flush_every`` amortizes disk writes: the JSON cache is rewritten
+    atomically once at least that many new estimates have accumulated
+    (and always at the end of the ``estimate`` call that crossed the
+    threshold).  The default of 1 flushes after every miss batch —
+    maximum durability; raise it for cheap-to-recompute backends in hot
+    search loops and call :meth:`flush` at the end.
+    """
+
+    def __init__(self, backend: CostBackend, cache: EstimateCache | str | None = None,
+                 *, flush_every: int = 1):
+        self.backend = backend
+        self.cache = EstimateCache(cache) if isinstance(cache, str) else cache
+        self.flush_every = max(1, int(flush_every))
+        self.hits = 0
+        self.misses = 0
+        self._pending = 0
+
+    def _salt(self) -> str:
+        # Recomputed per batch, NOT memoized: a refit predictor must change
+        # the salt (the expensive part — the forest content hash — is
+        # memoized per packing on the forest itself).
+        salt_fn = getattr(self.backend, "cache_salt", None)
+        return salt_fn() if callable(salt_fn) else self.backend.name
+
+    def estimate(self, queries: list[CostQuery]) -> list[CostEstimate]:
+        """Answer a batch of queries: cache first, then ONE batched backend
+        call for all misses, then (at most) a single atomic cache flush."""
+        results: list[CostEstimate | None] = [None] * len(queries)
+        miss_idx: list[int] = []
+        if self.cache is not None:
+            salt = self._salt()
+            keys = [
+                hashlib.sha1(f"{q.key}|{salt}".encode()).hexdigest()
+                for q in queries
+            ]
+        else:
+            keys = None
+        for i, q in enumerate(queries):
+            cached = self.cache.get(keys[i]) if keys is not None else None
+            if cached is not None:
+                cached.detail = dict(cached.detail, cached=True)
+                results[i] = cached
+                self.hits += 1
+            else:
+                miss_idx.append(i)
+        if miss_idx:
+            self.misses += len(miss_idx)
+            fresh = self.backend.estimate([queries[i] for i in miss_idx])
+            for i, est in zip(miss_idx, fresh):
+                results[i] = est
+                if keys is not None:
+                    self.cache.put(keys[i], est)
+            if self.cache is not None:
+                self._pending += len(miss_idx)
+                if self._pending >= self.flush_every:
+                    self.flush()
+        return results
+
+    def flush(self) -> None:
+        if self.cache is not None and self._pending:
+            self.cache.flush()
+            self._pending = 0
+
+    def estimate_one(self, query: CostQuery) -> CostEstimate:
+        return self.estimate([query])[0]
+
+    def admit(
+        self,
+        query: CostQuery,
+        *,
+        gamma_budget_mb: float | None = None,
+        phi_budget_ms: float | None = None,
+        safety_margin: float = 0.1,
+    ) -> tuple[bool, dict]:
+        """Admission gate (paper §6.4 safety property), backend-agnostic:
+        refuse when the predicted footprint/latency, inflated by
+        ``safety_margin``, exceeds the budget."""
+        est = self.estimate_one(query)
+        g_eff = est.gamma_mb * (1 + safety_margin)
+        p_eff = est.phi_ms * (1 + safety_margin)
+        ok = not (
+            (gamma_budget_mb is not None and g_eff > gamma_budget_mb)
+            or (phi_budget_ms is not None and p_eff > phi_budget_ms)
+        )
+        return ok, {"gamma_mb": est.gamma_mb, "phi_ms": est.phi_ms,
+                    "gamma_eff": g_eff, "phi_eff": p_eff,
+                    "source": est.source}

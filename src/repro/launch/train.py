@@ -3,18 +3,18 @@
     PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
         --reduced --steps 50 --ckpt-dir /tmp/ck
 
-Before building the jitted step, the launcher predicts the training-step
-memory footprint (AOT ``lower().compile().memory_analysis()`` at smoke
-scale, or the fitted perf4sight forest when a model file is supplied) and
-refuses jobs over the budget — the paper's §6.4 safety property.
+Before building the jitted step, the launcher asks the unified cost engine
+(``repro.engine``) for the training-step footprint — the AnalyticalBackend's
+AOT ``lower().compile()`` + trip-count-aware HLO roofline, no execution —
+and refuses jobs over the budget: the paper's §6.4 safety property.
+Estimates are cached on disk (``--estimate-cache``), so re-launching the
+same cell readmits instantly without recompiling.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-
-import jax
 
 from repro.configs.base import ShapeSpec
 from repro.configs.registry import ARCH_IDS, get_config
@@ -35,7 +35,13 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--grad-compression", type=float, default=None)
     ap.add_argument("--memory-budget-gb", type=float, default=None,
-                    help="admission gate: refuse if predicted HBM exceeds this")
+                    help="admission gate: refuse if predicted HBM (inflated "
+                         "by --admission-margin) exceeds this")
+    ap.add_argument("--admission-margin", type=float, default=0.1,
+                    help="safety margin applied to the predicted footprint "
+                         "before comparing to the budget (0 = exact)")
+    ap.add_argument("--estimate-cache", default=None,
+                    help="JSON path for the engine's on-disk estimate cache")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -43,29 +49,27 @@ def main() -> None:
 
     admission = None
     if args.memory_budget_gb is not None:
+        from repro.engine import (
+            AnalyticalBackend,
+            CostEngine,
+            CostQuery,
+            EnsembleBackend,
+        )
+
+        engine = CostEngine(
+            EnsembleBackend([AnalyticalBackend(reduced=args.reduced)]),
+            cache=args.estimate_cache,
+        )
+
         def admission(cfg, shape):
-            from repro.launch.dryrun import lower_cell  # noqa: PLC0415
-            # smoke-scale AOT estimate on the local device
-            from repro.models import transformer as T
-            from repro.optim.optimizer import apply_updates, init_opt_state
-
-            params = T.init_params(cfg, 0)
-            opt_cfg = OptimizerConfig()
-
-            def step(state, batch):
-                (l, _), g = jax.value_and_grad(T.loss_fn, has_aux=True)(
-                    state["params"], batch, cfg)
-                p2, o2, _ = apply_updates(state["params"], g, state["opt"], opt_cfg)
-                return {"params": p2, "opt": o2}, l
-
-            from repro.data.pipeline import make_batch
-            state = {"params": params, "opt": init_opt_state(params, opt_cfg)}
-            batch = make_batch(cfg, shape, 0)
-            compiled = jax.jit(step).lower(state, batch).compile()
-            ma = compiled.memory_analysis()
-            gb = (ma.argument_size_in_bytes + ma.output_size_in_bytes
-                  + ma.temp_size_in_bytes) / 1e9
-            return gb <= args.memory_budget_gb, {"predicted_gb": gb}
+            ok, info = engine.admit(
+                CostQuery(arch=args.arch, bs=shape.global_batch,
+                          seq=shape.seq_len, stage="train"),
+                gamma_budget_mb=args.memory_budget_gb * 1e3,
+                safety_margin=args.admission_margin,
+            )
+            info["predicted_gb"] = info["gamma_mb"] / 1e3
+            return ok, info
 
     opt = OptimizerConfig(kind="adamw", lr=args.lr, warmup_steps=10,
                           total_steps=max(args.steps, 100))

@@ -1,0 +1,406 @@
+"""Unified cost-engine tests: backend parity, ensemble fallback ordering,
+estimate cache hit/miss, predictor serialization round-trips, and the
+batched-vs-scalar speedup guarantee (ISSUE 1 acceptance)."""
+
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dataset import Datapoint, DatasetCache
+from repro.core.features import network_features
+from repro.core.predictor import Perf4Sight
+from repro.core.pruning import pruned_model
+from repro.core.search import Constraints, evolutionary_search
+from repro.engine import (
+    AnalyticalBackend,
+    BackendUnavailable,
+    CostEngine,
+    CostEstimate,
+    CostQuery,
+    EnsembleBackend,
+    EstimateCache,
+    ForestBackend,
+    ProfilerBackend,
+)
+
+WM, HW = 0.25, 16
+
+
+def _synthetic_dps(n=50, seed=0, family="squeezenet"):
+    rng = np.random.default_rng(seed)
+    dps = []
+    for _ in range(n):
+        level = float(rng.uniform(0, 0.9))
+        bs = int(rng.integers(2, 33))
+        m = pruned_model(family, level, "uniform", seed=0,
+                         width_mult=WM, input_hw=HW)
+        f = network_features(m.conv_specs(), bs)
+        dps.append(Datapoint(
+            family=family, level=level, strategy="uniform", bs=bs,
+            width_mult=WM, input_hw=HW, seed=0,
+            gamma_mb=5.0 + f[4] / 1e5, phi_ms=2.0 + f[14] / 1e7,
+            features=[float(v) for v in f]))
+    return dps
+
+
+@pytest.fixture(scope="module")
+def predictor():
+    return Perf4Sight(n_estimators=40).fit(_synthetic_dps())
+
+
+@pytest.fixture(scope="module")
+def candidate_specs():
+    rng = np.random.default_rng(7)
+    return [
+        pruned_model("squeezenet", float(rng.uniform(0, 0.8)), "random",
+                     seed=i, width_mult=WM, input_hw=HW).conv_specs()
+        for i in range(30)
+    ]
+
+
+# -- CostQuery ---------------------------------------------------------------
+
+
+def test_query_key_is_content_keyed(candidate_specs):
+    s = candidate_specs[0]
+    q1 = CostQuery(spec=s, bs=8, stage="train")
+    renamed = type(s)(name="other-name", layers=s.layers)
+    assert q1.key == CostQuery(spec=renamed, bs=8, stage="train").key
+    assert q1.key != CostQuery(spec=s, bs=16, stage="train").key
+    assert q1.key != CostQuery(spec=s, bs=8, stage="infer").key
+    assert q1.key != CostQuery(spec=candidate_specs[1], bs=8, stage="train").key
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        CostQuery(bs=8)  # no spec/arch/model
+    with pytest.raises(ValueError):
+        CostQuery(bs=8, arch="qwen3-4b", stage="decode")
+
+
+# -- ForestBackend parity ----------------------------------------------------
+
+
+def test_forest_backend_batched_matches_legacy_scalar(predictor, candidate_specs):
+    backend = ForestBackend(train=predictor)
+    queries = [CostQuery(spec=s, bs=16, stage="train") for s in candidate_specs]
+    ests = backend.estimate(queries)
+    for est, spec in zip(ests, candidate_specs):
+        g, p = predictor.predict(spec, 16)
+        assert est.gamma_mb == pytest.approx(g, rel=1e-9)
+        assert est.phi_ms == pytest.approx(p, rel=1e-9)
+        assert est.source == "forest"
+
+
+def test_forest_backend_mixed_stages(predictor, candidate_specs):
+    backend = ForestBackend(train=predictor, infer=predictor)
+    queries = [
+        CostQuery(spec=s, bs=4, stage=("train" if i % 2 == 0 else "infer"))
+        for i, s in enumerate(candidate_specs[:10])
+    ]
+    ests = backend.estimate(queries)
+    for q, est in zip(queries, ests):
+        g, p = predictor.predict(q.spec, q.bs)
+        assert est.gamma_mb == pytest.approx(g, rel=1e-9)
+
+
+def test_forest_backend_unfitted_stage_unsupported(predictor, candidate_specs):
+    backend = ForestBackend(train=predictor)  # no infer predictor
+    assert not backend.supports(CostQuery(spec=candidate_specs[0], bs=4,
+                                          stage="infer"))
+    with pytest.raises(BackendUnavailable):
+        backend.estimate([CostQuery(spec=candidate_specs[0], bs=4, stage="infer")])
+
+
+# -- AnalyticalBackend (CNN closed forms) ------------------------------------
+
+
+def test_analytical_backend_cnn_specs(candidate_specs):
+    backend = AnalyticalBackend()
+    qs = [CostQuery(spec=s, bs=8, stage="train") for s in candidate_specs[:5]]
+    ests = backend.estimate(qs)
+    for est in ests:
+        assert est.gamma_mb > 0 and est.phi_ms > 0
+        assert est.source == "analytical"
+    # batch size monotonicity: bigger batch, bigger footprint
+    small = backend.estimate([CostQuery(spec=candidate_specs[0], bs=2)])[0]
+    big = backend.estimate([CostQuery(spec=candidate_specs[0], bs=32)])[0]
+    assert big.gamma_mb > small.gamma_mb
+    # inference cheaper than training at the same batch size
+    inf = backend.estimate(
+        [CostQuery(spec=candidate_specs[0], bs=2, stage="infer")])[0]
+    assert inf.gamma_mb < small.gamma_mb
+
+
+# -- EnsembleBackend fallback ordering ---------------------------------------
+
+
+class _StubBackend:
+    def __init__(self, name, answer=None, supported=True, fail=False):
+        self.name = name
+        self.answer = answer
+        self.supported = supported
+        self.fail = fail
+        self.calls = 0
+
+    def supports(self, q):
+        return self.supported
+
+    def estimate(self, queries):
+        self.calls += 1
+        if self.fail:
+            raise BackendUnavailable(f"{self.name} down")
+        return [CostEstimate(gamma_mb=self.answer, phi_ms=self.answer,
+                             source=self.name) for _ in queries]
+
+
+def test_ensemble_first_supporting_backend_wins(candidate_specs):
+    a = _StubBackend("a", answer=1.0)
+    b = _StubBackend("b", answer=2.0)
+    ens = EnsembleBackend([a, b])
+    ests = ens.estimate([CostQuery(spec=candidate_specs[0], bs=4)])
+    assert ests[0].source == "a"
+    assert b.calls == 0
+
+
+def test_ensemble_falls_through_unsupported_and_failing(candidate_specs):
+    unsupported = _StubBackend("skipme", supported=False)
+    failing = _StubBackend("failing", fail=True)
+    answering = _StubBackend("answering", answer=3.0)
+    ens = EnsembleBackend([unsupported, failing, answering])
+    ests = ens.estimate([CostQuery(spec=candidate_specs[0], bs=4)] * 3)
+    assert all(e.source == "answering" for e in ests)
+    assert failing.calls == 1  # tried, dropped out
+
+
+def test_ensemble_exhausted_raises(candidate_specs):
+    ens = EnsembleBackend([_StubBackend("x", supported=False)])
+    with pytest.raises(BackendUnavailable):
+        ens.estimate([CostQuery(spec=candidate_specs[0], bs=4)])
+
+
+def test_ensemble_forest_to_analytical_chain(predictor, candidate_specs):
+    """Real chain: fitted forest answers train queries, analytical catches
+    the stage the forest was never fitted for."""
+    ens = EnsembleBackend([ForestBackend(train=predictor), AnalyticalBackend()])
+    qs = [CostQuery(spec=candidate_specs[0], bs=4, stage="train"),
+          CostQuery(spec=candidate_specs[0], bs=4, stage="infer")]
+    ests = ens.estimate(qs)
+    assert ests[0].source == "forest"
+    assert ests[1].source == "analytical"
+
+
+# -- estimate cache ----------------------------------------------------------
+
+
+def test_engine_cache_hit_miss(predictor, candidate_specs, tmp_path):
+    path = str(tmp_path / "estimates.json")
+    counting = _StubBackend("counting", answer=1.5)
+    engine = CostEngine(counting, cache=EstimateCache(path))
+    qs = [CostQuery(spec=s, bs=8) for s in candidate_specs[:6]]
+    engine.estimate(qs)
+    assert (engine.hits, engine.misses) == (0, 6)
+    assert counting.calls == 1
+
+    engine.estimate(qs)
+    assert (engine.hits, engine.misses) == (6, 6)
+    assert counting.calls == 1  # all served from cache
+
+    # a fresh process (new engine) reads the flushed file
+    engine2 = CostEngine(counting, cache=EstimateCache(path))
+    ests = engine2.estimate(qs)
+    assert engine2.hits == 6 and counting.calls == 1
+    assert all(e.detail.get("cached") for e in ests)
+    assert all(e.gamma_mb == 1.5 for e in ests)
+
+
+def test_cache_keys_salted_by_backend_identity(predictor, candidate_specs, tmp_path):
+    """Estimates cached under one fitted predictor (or backend config) must
+    not be served for a different one — the key is salted with the backend's
+    content hash."""
+    path = str(tmp_path / "estimates.json")
+    qs = [CostQuery(spec=candidate_specs[0], bs=8)]
+
+    e1 = CostEngine(ForestBackend(train=predictor), cache=EstimateCache(path))
+    e1.estimate(qs)
+    assert e1.misses == 1
+
+    # same cache file, differently-fitted predictor → must miss, not alias
+    other = Perf4Sight(n_estimators=10).fit(_synthetic_dps(30, seed=99))
+    e2 = CostEngine(ForestBackend(train=other), cache=EstimateCache(path))
+    e2.estimate(qs)
+    assert (e2.hits, e2.misses) == (0, 1)
+
+    # same fitted predictor again → hit
+    e3 = CostEngine(ForestBackend(train=predictor), cache=EstimateCache(path))
+    e3.estimate(qs)
+    assert (e3.hits, e3.misses) == (1, 0)
+
+    # analytical backend config is part of the salt too
+    a1 = CostEngine(AnalyticalBackend(reduced=True), cache=EstimateCache(path))
+    a1.estimate(qs)
+    a2 = CostEngine(AnalyticalBackend(reduced=False), cache=EstimateCache(path))
+    a2.estimate(qs)
+    assert a2.hits == 0 and a2.misses == 1
+
+
+def test_refit_predictor_invalidates_cache_on_same_engine(candidate_specs, tmp_path):
+    """The salt is recomputed per batch: refitting the predictor behind a
+    live engine must stop cache hits from the old fit."""
+    path = str(tmp_path / "estimates.json")
+    model = Perf4Sight(n_estimators=8).fit(_synthetic_dps(25, seed=1))
+    engine = CostEngine(ForestBackend(train=model), cache=EstimateCache(path))
+    qs = [CostQuery(spec=candidate_specs[0], bs=8)]
+    engine.estimate(qs)
+    engine.estimate(qs)
+    assert (engine.hits, engine.misses) == (1, 1)
+    model.fit(_synthetic_dps(25, seed=2))  # refit in place
+    engine.estimate(qs)
+    assert (engine.hits, engine.misses) == (1, 2)  # miss, not a stale hit
+
+
+def test_engine_flush_every_amortizes_writes(candidate_specs, tmp_path):
+    path = str(tmp_path / "estimates.json")
+    backend = _StubBackend("s", answer=1.0)
+    engine = CostEngine(backend, cache=EstimateCache(path), flush_every=100)
+    engine.estimate([CostQuery(spec=s, bs=8) for s in candidate_specs[:5]])
+    assert not os.path.exists(path)  # below threshold: nothing written yet
+    engine.flush()
+    assert os.path.exists(path)
+    assert CostEngine(backend, cache=EstimateCache(path)).estimate(
+        [CostQuery(spec=candidate_specs[0], bs=8)])[0].detail.get("cached")
+
+
+def test_ensemble_failure_message_names_causes(candidate_specs):
+    ens = EnsembleBackend([_StubBackend("down", fail=True)])
+    with pytest.raises(BackendUnavailable, match="down"):
+        ens.estimate([CostQuery(spec=candidate_specs[0], bs=4)])
+
+
+def test_model_only_query_keys_distinguish_pruned_variants():
+    m1 = pruned_model("squeezenet", 0.3, "uniform", width_mult=WM, input_hw=HW)
+    m2 = pruned_model("squeezenet", 0.7, "uniform", width_mult=WM, input_hw=HW)
+    q1 = CostQuery(bs=4, spec=None, model=m1)
+    q2 = CostQuery(bs=4, spec=None, model=m2)
+    assert q1.key != q2.key
+
+
+def test_estimate_cache_corrupt_file_quarantined(tmp_path):
+    path = str(tmp_path / "estimates.json")
+    with open(path, "w") as f:
+        f.write('{"truncated": ')
+    cache = EstimateCache(path)  # must not raise
+    assert len(cache) == 0
+    assert os.path.exists(path + ".corrupt")
+    cache.put("k", CostEstimate(gamma_mb=1.0, phi_ms=2.0, source="s"))
+    cache.flush()
+    assert EstimateCache(path).get("k").phi_ms == 2.0
+
+
+def test_dataset_cache_corrupt_file_quarantined(tmp_path):
+    path = str(tmp_path / "profile.json")
+    with open(path, "w") as f:
+        f.write('NOT JSON {{{')
+    c = DatasetCache(path)  # must not raise
+    assert len(c) == 0
+    assert os.path.exists(path + ".corrupt")
+    c.flush()
+    with open(path) as f:
+        assert json.load(f) == {}
+
+
+# -- predictor serialization --------------------------------------------------
+
+
+@pytest.mark.parametrize("ext", ["json", "npz"])
+def test_perf4sight_save_load_roundtrip(predictor, candidate_specs, tmp_path, ext):
+    path = str(tmp_path / f"model.{ext}")
+    predictor.save(path)
+    loaded = Perf4Sight.load(path)
+    assert loaded.fitted
+    X = np.stack([network_features(s, 8) for s in candidate_specs[:8]])
+    g0, p0 = predictor.predict_features(X)
+    g1, p1 = loaded.predict_features(X)
+    np.testing.assert_allclose(g1, g0, rtol=1e-12)
+    np.testing.assert_allclose(p1, p0, rtol=1e-12)
+
+
+def test_pure_forest_npz_roundtrip(tmp_path):
+    dps = _synthetic_dps(30, seed=3)
+    model = Perf4Sight(n_estimators=15, hybrid=False).fit(dps)
+    path = str(tmp_path / "forest.npz")
+    model.save(path)
+    loaded = Perf4Sight.load(path)
+    spec = pruned_model("squeezenet", 0.4, "uniform",
+                        width_mult=WM, input_hw=HW).conv_specs()
+    assert loaded.predict(spec, 8) == model.predict(spec, 8)
+
+
+# -- batched search + speedup acceptance --------------------------------------
+
+
+def test_search_uses_batched_estimates(predictor):
+    """The ES must drive the engine (batched estimate calls), and the engine
+    must see exactly 2 calls per generation (train + infer stages)."""
+    calls = []
+
+    class _SpyEngine(CostEngine):
+        def estimate(self, queries):
+            calls.append(len(queries))
+            return super().estimate(queries)
+
+    engine = _SpyEngine(ForestBackend(train=predictor, infer=predictor))
+    r = evolutionary_search(
+        "squeezenet", engine, Constraints(gamma_mb=1e9, train_bs=8, infer_bs=1),
+        population=12, iterations=3, width_mult=WM, input_hw=HW, seed=0)
+    assert r.fitness > 0  # loose budget → feasible
+    # 1 initial population + 3 generations of children, × 2 stages
+    assert len(calls) == 8
+    assert calls[0] == 12  # whole population in ONE call
+    assert r.evaluations == 12 + 3 * 9  # pop + iter × (pop - parents)
+
+
+def test_batched_estimate_5x_faster_than_scalar(predictor):
+    """ISSUE 1 acceptance: ≥5× on a 100-candidate population vs the
+    per-candidate scalar path (same work, N Python round-trips)."""
+    rng = np.random.default_rng(5)
+    specs = [
+        pruned_model("squeezenet", float(rng.uniform(0, 0.8)), "random",
+                     seed=100 + i, width_mult=WM, input_hw=HW).conv_specs()
+        for i in range(100)
+    ]
+    backend = ForestBackend(train=predictor)
+    queries = [CostQuery(spec=s, bs=16) for s in specs]
+    backend.estimate(queries[:2])          # warm packed forest
+    predictor.predict(specs[0], 16)        # warm scalar path
+
+    t_batch = min(_timed(lambda: backend.estimate(queries)) for _ in range(3))
+    t_scalar = min(
+        _timed(lambda: [predictor.predict(s, 16) for s in specs])
+        for _ in range(3))
+    assert t_scalar / t_batch >= 5.0, (
+        f"batched {t_batch * 1e3:.1f}ms vs scalar {t_scalar * 1e3:.1f}ms "
+        f"({t_scalar / t_batch:.1f}x, need >=5x)")
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+# -- profiler backend (ground truth, slow) ------------------------------------
+
+
+@pytest.mark.slow
+def test_profiler_backend_ground_truth():
+    m = pruned_model("squeezenet", 0.5, "uniform", width_mult=WM, input_hw=HW)
+    backend = ProfilerBackend(repeats=1, warmup=0)
+    q = CostQuery(spec=m.conv_specs(), bs=2, model=m)
+    assert backend.supports(q)
+    est = backend.estimate([q])[0]
+    assert est.gamma_mb > 0 and est.phi_ms > 0
+    assert est.source == "profiler"

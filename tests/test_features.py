@@ -4,13 +4,15 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis import given, settings, st
 
 from repro.core.features import (
     FEATURE_NAMES,
     FEATURE_NAMES_CONCAT,
     ConvLayerSpec,
     NetworkSpec,
+    feature_matrix,
     layer_features,
     network_features,
 )
@@ -80,6 +82,36 @@ def test_grouped_conv_divides_channels():
     fg, fd = layer_features(lg, 4), layer_features(ld, 4)
     assert fg["mem_w"] == fd["mem_w"] / 8
     assert fg["mm_ops_fwd"] == fd["mm_ops_fwd"] / 8
+
+
+def test_batch_feature_matrix_matches_scalar_path():
+    """The vectorized batch path must reproduce the scalar reference exactly
+    (same formulas over flat arrays + segment sum)."""
+    rng = np.random.default_rng(0)
+    nets_and_bs = []
+    for i in range(12):
+        layers = tuple(
+            ConvLayerSpec(
+                n=int(rng.integers(1, 64)),
+                m=int(rng.integers(1, 64)),
+                k=int(rng.choice([1, 3, 5])),
+                stride=int(rng.integers(1, 3)),
+                padding=int(rng.integers(0, 3)),
+                ip=int(rng.integers(8, 48)),
+            )
+            for _ in range(int(rng.integers(1, 9)))
+        )
+        nets_and_bs.append((NetworkSpec(f"net{i}", layers), int(rng.integers(1, 64))))
+    depthwise = ConvLayerSpec(n=8, m=8, k=3, groups=8, ip=16, padding=1)
+    nets_and_bs.append((NetworkSpec("dw", (depthwise,)), 4))
+    for qr_mode in ("sum", "concat"):
+        batched = feature_matrix(nets_and_bs, qr_mode)
+        scalar = np.stack([network_features(n, b, qr_mode) for n, b in nets_and_bs])
+        np.testing.assert_allclose(batched, scalar, rtol=1e-12, atol=0)
+
+
+def test_batch_feature_matrix_empty():
+    assert feature_matrix([]).shape == (0, len(FEATURE_NAMES))
 
 
 def test_network_features_sum_over_layers():

@@ -2,7 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis import given, settings, st
 
 from repro.core.pruning import (
     l1_scores,

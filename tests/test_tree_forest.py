@@ -2,7 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis import given, settings, st
 
 from repro.core.forest import RandomForestRegressor
 from repro.core.tree import RegressionTree
@@ -86,6 +87,29 @@ def test_forest_oob_error_reported():
     y = X @ np.array([1.0, 2.0, 3.0]) + 5
     f = RandomForestRegressor(n_estimators=40, seed=3).fit(X, y)
     assert f.oob_mape_ is not None and f.oob_mape_ < 0.2
+
+
+def test_forest_vectorized_predict_matches_per_tree():
+    """The packed cross-tree traversal must agree exactly with averaging
+    per-tree predictions (the pre-vectorization path)."""
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(120, 6))
+    y = X[:, 0] * 3 - X[:, 3] ** 2 + rng.normal(size=120) * 0.1
+    f = RandomForestRegressor(n_estimators=25, seed=9).fit(X, y)
+    Xt = rng.normal(size=(64, 6)) * 2
+    np.testing.assert_allclose(f.predict(Xt), f._predict_per_tree(Xt), rtol=1e-12)
+    # single-sample and 1-D input paths
+    np.testing.assert_allclose(f.predict(Xt[0]), f._predict_per_tree(Xt[0]))
+
+
+def test_forest_array_roundtrip_matches():
+    rng = np.random.default_rng(12)
+    X = rng.normal(size=(90, 4))
+    y = X @ np.array([1.0, -2.0, 0.5, 3.0])
+    f = RandomForestRegressor(n_estimators=12, seed=2).fit(X, y)
+    f2 = RandomForestRegressor.from_arrays(f.to_arrays("g_"), "g_")
+    np.testing.assert_allclose(f2.predict(X), f.predict(X))
+    assert f2._y_min == f._y_min and f2._y_max == f._y_max
 
 
 def test_forest_serialisation_roundtrip():
