@@ -6,25 +6,42 @@ Both paths do identical work per candidate — feature extraction + forest
 prediction for (Γ, Φ) — but the batched path builds ONE feature matrix
 (vectorized over every layer of every candidate) and walks the packed
 forest once, while the scalar path pays N Python round-trips.  Also
-reports the on-disk estimate cache hit path (second population visit).
+reports the on-disk estimate cache hit path (second population visit) and
+— so the bench trajectory records prediction ERROR, not just speed — the
+calibrated-vs-uncalibrated AnalyticalBackend accuracy against the
+checked-in profiler ground truth (ISSUE 2).
 
     PYTHONPATH=src python -m benchmarks.engine_bench
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
-from repro.core.dataset import Datapoint
+from repro.core.dataset import Datapoint, DatasetCache
 from repro.core.features import network_features
 from repro.core.predictor import Perf4Sight
 from repro.core.search import sample_subnetwork
-from repro.engine import CostEngine, CostQuery, EstimateCache, ForestBackend
+from repro.engine import (
+    AnalyticalBackend,
+    CostEngine,
+    CostQuery,
+    EstimateCache,
+    ForestBackend,
+    ProfilerBackend,
+    calibrate,
+    default_workloads,
+    evaluate_accuracy,
+)
 from repro.models.cnn import build_resnet50
 
 from .common import csv_line
+
+PROFILE_CACHE = os.path.join(os.path.dirname(__file__), "cache",
+                             "cnn_profile.json")
 
 POPULATION = 100
 BS = 16
@@ -84,7 +101,6 @@ def run(print_fn=print, population: int = POPULATION, repeats: int = 3) -> dict:
 
     # cache path: second visit to the same population is pure dict lookups
     cache_path = "/tmp/perf4sight_engine_bench_cache.json"
-    import os
     if os.path.exists(cache_path):
         os.unlink(cache_path)
     engine = CostEngine(backend, cache=EstimateCache(cache_path))
@@ -98,8 +114,50 @@ def run(print_fn=print, population: int = POPULATION, repeats: int = 3) -> dict:
     print_fn(csv_line("engine/cached_ms_per_100", t_cached * 1e3,
                       f"hits={engine.hits}"))
     print_fn(csv_line("engine/parity_max_abs_dev", max_dev, "expect=0"))
+    accuracy = calibration_accuracy(print_fn)
     return {"speedup": speedup, "t_scalar_s": t_scalar, "t_batch_s": t_batch,
-            "t_cached_s": t_cached, "max_dev": max_dev}
+            "t_cached_s": t_cached, "max_dev": max_dev, **accuracy}
+
+
+def calibration_accuracy(print_fn=print) -> dict:
+    """AnalyticalBackend prediction error vs profiler ground truth, before
+    and after device calibration.
+
+    Strictly read-only on the golden fixture: workloads missing from it are
+    skipped (never live-profiled with bench-grade repeats and written back —
+    that would pollute the ground truth tests/test_calibration.py asserts
+    against)."""
+    if not os.path.exists(PROFILE_CACHE):
+        print_fn(csv_line("engine/calibration_skipped", 1.0, "no cache"))
+        return {}
+    cache = DatasetCache(PROFILE_CACHE)
+    dps = [cache.get(w.key) for w in default_workloads()]
+    missing = sum(d is None for d in dps)
+    dps = [d for d in dps if d is not None]
+    if missing:
+        print_fn(csv_line("engine/calibration_workloads_missing", missing,
+                          "fixture stale; skipped, not re-profiled"))
+    if len(dps) < 3:
+        print_fn(csv_line("engine/calibration_skipped", 1.0,
+                          "fixture too sparse"))
+        return {}
+    backend = AnalyticalBackend()
+    before = evaluate_accuracy(backend, dps)
+    spec = calibrate(backend, ProfilerBackend(repeats=1, warmup=0), [],
+                     datapoints=dps)
+    after = evaluate_accuracy(backend, dps)
+    print_fn(csv_line("engine/phi_mape_uncalibrated", before["phi_mape"],
+                      f"device={spec.meta['base_device']}"))
+    print_fn(csv_line("engine/phi_mape_calibrated", after["phi_mape"],
+                      f"device={spec.name}"))
+    print_fn(csv_line("engine/gamma_mape_uncalibrated", before["gamma_mape"],
+                      f"n={before['n']}"))
+    print_fn(csv_line("engine/gamma_mape_calibrated", after["gamma_mape"],
+                      "target<=0.10"))
+    return {"phi_mape_uncal": before["phi_mape"],
+            "phi_mape_cal": after["phi_mape"],
+            "gamma_mape_uncal": before["gamma_mape"],
+            "gamma_mape_cal": after["gamma_mape"]}
 
 
 def _timed(fn) -> float:

@@ -414,7 +414,9 @@ def batch_network_features(
     cols = {c: np.asarray(v, dtype=np.float64) for c, v in rows.items()}
     f = _batch_layer_features(cols, qr_mode)
     per_layer = np.stack([f[k] for k in names], axis=1)      # (L_total, F)
-    np.add.at(out, np.asarray(seg), per_layer)
+    # explicit int dtype: an all-empty batch gives an empty seg list, which
+    # np.asarray would default to float64 — an invalid index array
+    np.add.at(out, np.asarray(seg, dtype=np.int64), per_layer)
     return out
 
 

@@ -19,18 +19,27 @@ __all__ = ["load_json_tolerant", "atomic_write_json", "atomic_write_bytes"]
 
 
 def load_json_tolerant(path: str) -> dict:
-    """Load a JSON dict; quarantine an unreadable/corrupt file and return {}."""
+    """Load a JSON dict; quarantine an unreadable/corrupt/non-dict file and
+    return {} (valid JSON that is not an object would crash callers just as
+    surely as a parse error)."""
     if not os.path.exists(path):
         return {}
     try:
         with open(path) as f:
-            return json.load(f)
-    except (json.JSONDecodeError, UnicodeDecodeError, OSError):
-        try:
-            os.replace(path, path + ".corrupt")
-        except OSError:
-            pass
+            data = json.load(f)
+        if isinstance(data, dict):
+            return data
+    except (json.JSONDecodeError, UnicodeDecodeError):
+        pass
+    except OSError:
+        # Transient read failure (permissions, I/O hiccup) is NOT evidence
+        # of corruption — never rename a possibly-valid cache away.
         return {}
+    try:
+        os.replace(path, path + ".corrupt")
+    except OSError:
+        pass
+    return {}
 
 
 def _atomic_write(path: str, mode: str, write_fn: Callable, suffix: str = "") -> None:

@@ -92,6 +92,10 @@ def roofline_from_compiled(
     hw: dict = TPU_V5E,
     compile_s: float = 0.0,
 ) -> RooflineReport:
+    # ``hw`` is a constants dict or an engine DeviceSpec (duck-typed so the
+    # core layer needs no engine import).
+    if hasattr(hw, "hw_table"):
+        hw = hw.hw_table()
     # Trip-count-aware parse of the optimized HLO (XLA's cost_analysis counts
     # while bodies once — see hlo_cost module docstring).
     cost = parse_hlo_cost(compiled.as_text())

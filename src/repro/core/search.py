@@ -32,11 +32,15 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.engine.engine import CostEngine
-from repro.engine.types import STAGE_INFER, STAGE_TRAIN, CostQuery
 from repro.models.cnn import CNN_BUILDERS
 
-__all__ = ["Constraints", "SearchResult", "evolutionary_search", "sample_subnetwork"]
+# NOTE: repro.engine is imported lazily inside the functions that need it —
+# the core layer must stay importable without dragging in the engine stack
+# (same discipline as roofline.py's duck-typed DeviceSpec handling), and the
+# engine package itself imports core modules.
+
+__all__ = ["Constraints", "SearchResult", "evolutionary_search",
+           "sample_subnetwork", "fold_population"]
 
 
 @dataclass
@@ -88,9 +92,34 @@ def _crossover(a: dict[str, int], b: dict[str, int], rng: np.random.Generator) -
     return {g: (a[g] if rng.random() < 0.5 else b[g]) for g in a}
 
 
-def _as_engine(backend) -> CostEngine:
+def fold_population(
+    widths_list: list[dict[str, int]],
+) -> tuple[list[dict[str, int]], list[int]]:
+    """Fold identical width dicts to unique entries + a fan-in index.
+
+    Converged populations produce many identical candidates (crossover of
+    identical parents, low-rate mutation); each duplicate would otherwise
+    pay a full model build + feature build + engine query.  Returns
+    ``(unique, fan_in)`` with ``unique[fan_in[i]]`` the representative of
+    candidate ``i``.
+    """
+    uniq_index: dict[tuple, int] = {}
+    unique: list[dict[str, int]] = []
+    fan_in: list[int] = []
+    for w in widths_list:
+        key = tuple(sorted(w.items()))
+        if key not in uniq_index:
+            uniq_index[key] = len(unique)
+            unique.append(w)
+        fan_in.append(uniq_index[key])
+    return unique, fan_in
+
+
+def _as_engine(backend) -> "CostEngine":
     """Accept a CostEngine, any CostBackend, or (train, infer) Perf4Sight
     predictors (the pre-engine calling convention)."""
+    from repro.engine.engine import CostEngine
+
     if isinstance(backend, CostEngine):
         return backend
     if isinstance(backend, tuple):
@@ -128,6 +157,8 @@ def evolutionary_search(
     predictor_infer)`` tuple of fitted :class:`Perf4Sight` models.  Every
     generation is scored with ONE batched ``estimate`` call per stage.
     """
+    from repro.engine.types import STAGE_INFER, STAGE_TRAIN, CostQuery
+
     engine = _as_engine(backend)
     rng = np.random.default_rng(seed)
     build = CNN_BUILDERS[family]
@@ -139,18 +170,27 @@ def evolutionary_search(
         widths_list: list[dict[str, int]],
     ) -> list[tuple[float, float, float, float]]:
         """Batched: (fitness (-inf if constraints violated), Γ, γ, φ) per
-        candidate, from two engine calls covering the whole population."""
+        candidate, from two engine calls covering the whole population.
+
+        Identical width dicts within a generation (converged populations
+        produce many, via crossover of identical parents) are folded to ONE
+        model build + feature build + query; results fan back out per
+        candidate.
+        """
         nonlocal evaluations
         evaluations += len(widths_list)
+        uniq_widths, fan_in = fold_population(widths_list)
         specs = [
-            build(widths=w, input_hw=input_hw).conv_specs() for w in widths_list
+            build(widths=w, input_hw=input_hw).conv_specs() for w in uniq_widths
         ]
-        est_t = engine.estimate(
+        uniq_t = engine.estimate(
             [CostQuery(spec=s, bs=constraints.train_bs, stage=STAGE_TRAIN)
              for s in specs])
-        est_i = engine.estimate(
+        uniq_i = engine.estimate(
             [CostQuery(spec=s, bs=constraints.infer_bs, stage=STAGE_INFER)
              for s in specs])
+        est_t = [uniq_t[j] for j in fan_in]
+        est_i = [uniq_i[j] for j in fan_in]
         out = []
         for w, et, ei in zip(widths_list, est_t, est_i):
             g_train, g_inf, p_inf = et.gamma_mb, ei.gamma_mb, ei.phi_ms

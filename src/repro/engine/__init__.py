@@ -3,17 +3,36 @@
 One batched, cacheable API — ``CostBackend.estimate(queries) ->
 CostEstimate[]`` — over the three cost paths this repo grew separately:
 the fitted perf4sight forest, the HLO/roofline analytical model, and the
-ground-truth profiler.
+ground-truth profiler.  Hardware constants live in the device registry
+(``repro.engine.devices``) and are fitted per device by
+``repro.engine.calibrate``.
 """
 
 from repro.engine.backends import (
-    HOST_CPU,
     AnalyticalBackend,
     EnsembleBackend,
     ForestBackend,
     ProfilerBackend,
 )
 from repro.engine.cache import EstimateCache
+from repro.engine.calibrate import (
+    CalibrationWorkload,
+    calibrate,
+    default_workloads,
+    evaluate_accuracy,
+    measure_ground_truth,
+)
+from repro.engine.devices import (
+    DEVICE_REGISTRY,
+    DeviceSpec,
+    from_jax_device,
+    get_device,
+    list_devices,
+    load_device_spec,
+    register_device,
+    resolve_device,
+    save_device_spec,
+)
 from repro.engine.engine import CostEngine
 from repro.engine.types import (
     STAGE_INFER,
@@ -27,15 +46,28 @@ from repro.engine.types import (
 __all__ = [
     "AnalyticalBackend",
     "BackendUnavailable",
+    "CalibrationWorkload",
     "CostBackend",
     "CostEngine",
     "CostEstimate",
     "CostQuery",
+    "DEVICE_REGISTRY",
+    "DeviceSpec",
     "EnsembleBackend",
     "EstimateCache",
     "ForestBackend",
-    "HOST_CPU",
     "ProfilerBackend",
     "STAGE_INFER",
     "STAGE_TRAIN",
+    "calibrate",
+    "default_workloads",
+    "evaluate_accuracy",
+    "from_jax_device",
+    "get_device",
+    "list_devices",
+    "load_device_spec",
+    "measure_ground_truth",
+    "register_device",
+    "resolve_device",
+    "save_device_spec",
 ]

@@ -23,6 +23,8 @@ import numpy as np
 
 from repro.core.features import FEATURE_NAMES, feature_matrix
 from repro.core.predictor import Perf4Sight
+from repro.engine.decompose import latency_terms, memory_terms
+from repro.engine.devices import DeviceSpec, resolve_device
 from repro.engine.types import (
     STAGE_INFER,
     STAGE_TRAIN,
@@ -36,18 +38,7 @@ __all__ = [
     "AnalyticalBackend",
     "ProfilerBackend",
     "EnsembleBackend",
-    "HOST_CPU",
 ]
-
-# Roofline constants for the profiling host (1-core CPU stand-in for the
-# edge device; see DESIGN notes in core/profiler.py).  Deliberately coarse:
-# the analytical backend is a fallback ranker, not a calibrated model.
-HOST_CPU = {
-    "peak_flops_bf16": 5e10,   # FLOP/s
-    "hbm_bw": 2e10,            # B/s
-    "ici_bw": 1e9,             # B/s (loopback; collectives are degenerate)
-    "hbm_bytes": 4e9,
-}
 
 
 class ForestBackend:
@@ -102,26 +93,39 @@ class AnalyticalBackend:
     im2col op count and allocation traffic.  LM arch queries AOT-compile the
     real step (no execution) and run the trip-count-aware HLO cost parse
     through the roofline terms — the same machinery as core/roofline.py.
+
+    Hardware constants come from :class:`~repro.engine.devices.DeviceSpec`
+    (``device`` for the CNN path, ``lm_device`` for the LM path) — registry
+    guesses by default, per-device fitted constants after
+    :func:`repro.engine.calibrate.calibrate`.
     """
 
     name = "analytical"
 
-    def __init__(self, hw: dict | None = None, lm_hw: dict | None = None,
-                 reduced: bool = True, bytes_per_el: int = 4):
-        self.hw = hw or HOST_CPU
-        self.lm_hw = lm_hw      # None → launch.mesh.TPU_V5E, resolved lazily
+    def __init__(self, device: "DeviceSpec | str | dict | None" = None,
+                 lm_device: "DeviceSpec | str | dict | None" = None,
+                 reduced: bool = True, bytes_per_el: int = 4,
+                 hw: dict | None = None, lm_hw: dict | None = None):
+        # ``hw`` / ``lm_hw`` are the pre-registry dict spellings, still
+        # accepted; ``device`` / ``lm_device`` take registry names, persisted
+        # spec paths, or DeviceSpec instances (see engine/devices.py).
+        self.device = resolve_device(device if device is not None else hw)
+        self.lm_device = resolve_device(
+            lm_device if lm_device is not None else lm_hw, default="tpu_v5e")
         self.reduced = reduced
         self.bytes_per_el = bytes_per_el
         self._compiled_cache: dict[tuple, CostEstimate] = {}
+        # infer-stage heuristic indices; the train stage goes through the
+        # shared engine/decompose.py terms instead
         self._i_alloc = FEATURE_NAMES.index("mem_alloc_total")
-        self._i_ops = FEATURE_NAMES.index("mm_ops_sum")
         self._i_ops_fwd = FEATURE_NAMES.index("mm_ops_fwd")
         self._i_i2c = FEATURE_NAMES.index("mm_i2c_total_sum")
 
     def cache_salt(self) -> str:
-        hw = sorted(self.hw.items())
-        lm = sorted(self.lm_hw.items()) if self.lm_hw else "tpu_v5e"
-        return f"{self.name}:{self.reduced}:{self.bytes_per_el}:{hw}:{lm}"
+        # Salted by BOTH device fingerprints: calibrated and uncalibrated
+        # estimates (or two differently-fitted specs) never alias on disk.
+        return (f"{self.name}:{self.reduced}:{self.bytes_per_el}:"
+                f"{self.device.fingerprint()}:{self.lm_device.fingerprint()}")
 
     def supports(self, query: CostQuery) -> bool:
         return query.spec is not None or query.arch is not None
@@ -148,26 +152,55 @@ class AnalyticalBackend:
         # Inference allocates no gradient buffers: approximate with the
         # weight + activation terms only (~alloc_total minus the grad terms
         # isn't directly a feature, so scale by the fwd/total op ratio).
-        alloc = feats[self._i_alloc]
-        ops = feats[self._i_ops]          # MAC count, fwd+bwd (train)
-        i2c = feats[self._i_i2c]
+        dev = self.device
         if q.stage == STAGE_INFER:
-            alloc = alloc / 3.0           # drop bwd_w / bwd_x buffers
+            # Inference heuristic: drop bwd_w / bwd_x buffers and ops.
+            alloc = feats[self._i_alloc] / 3.0
             ops = feats[self._i_ops_fwd]
-            i2c = i2c / 3.0
-        gamma_mb = self.bytes_per_el * alloc / 1e6
-        compute_s = 2.0 * ops / self.hw["peak_flops_bf16"]
-        memory_s = self.bytes_per_el * (alloc + i2c) / self.hw["hbm_bw"]
-        phi_ms = max(compute_s, memory_s) * 1e3
+            i2c = feats[self._i_i2c] / 3.0
+            flops = 2.0 * ops
+            bytes_moved = self.bytes_per_el * (alloc + i2c)
+            gamma_mb = dev.round_alloc(self.bytes_per_el * alloc) / 1e6
+        else:
+            # Train stage: the SAME decomposition the calibration fit uses
+            # (engine/decompose.py) — fitted constants multiply these terms.
+            flops, bytes_moved = (v[0] for v in
+                                  latency_terms(feats, self.bytes_per_el))
+            if dev.calibrated:
+                w_b, a_b = (v[0] for v in
+                            memory_terms(feats, self.bytes_per_el))
+                gamma_mb = (dev.mem_base_mb
+                            + dev.mem_weight_scale * dev.round_alloc(w_b) / 1e6
+                            + dev.mem_act_scale * dev.round_alloc(a_b) / 1e6)
+            else:
+                gamma_mb = dev.round_alloc(
+                    self.bytes_per_el * feats[self._i_alloc]) / 1e6
+        compute_s = flops / dev.peak_flops
+        memory_s = bytes_moved / dev.hbm_bw
+        if dev.calibrated and q.stage != STAGE_TRAIN:
+            # The additive combine and launch overhead were fitted on FULL
+            # training steps (backward-pass dispatch included); applying
+            # them to inference would let the train-fitted intercept
+            # dominate small sub-millisecond candidates.  Inference reuses
+            # only the fitted denominators under the plain roofline max.
+            phi_ms = max(compute_s, memory_s) * 1e3
+        else:
+            phi_ms = dev.combine_terms(compute_s, memory_s) * 1e3
         return CostEstimate(
             gamma_mb=float(gamma_mb), phi_ms=float(phi_ms), source=self.name,
             detail={"compute_s": float(compute_s), "memory_s": float(memory_s),
+                    "device": dev.name, "calibrated": dev.calibrated,
                     "dominant": "compute" if compute_s >= memory_s else "memory"})
 
     # -- LM HLO/roofline path -------------------------------------------------
 
+    def _reduced(self, q: CostQuery) -> bool:
+        """Per-query smoke/full choice; the backend flag is only a default."""
+        return self.reduced if q.reduced is None else q.reduced
+
     def _estimate_arch(self, q: CostQuery) -> CostEstimate:
-        key = (q.arch, q.stage, q.bs, q.seq, self.reduced)
+        key = (q.arch, q.stage, q.bs, q.seq, self._reduced(q),
+               self.lm_device.fingerprint())
         if key in self._compiled_cache:
             return self._compiled_cache[key]
         try:
@@ -188,12 +221,12 @@ class AnalyticalBackend:
         from repro.configs.registry import get_config
         from repro.core.hlo_cost import parse_hlo_cost
         from repro.core.profiler import memory_analysis_bytes
-        from repro.launch.mesh import TPU_V5E
         from repro.models import transformer as T
         from repro.optim.optimizer import OptimizerConfig, apply_updates
 
-        hw = self.lm_hw or TPU_V5E
-        cfg = get_config(q.arch, reduced=self.reduced)
+        dev = self.lm_device
+        reduced = self._reduced(q)
+        cfg = get_config(q.arch, reduced=reduced)
         kind = "train" if q.stage == STAGE_TRAIN else "prefill"
         shape = ShapeSpec("engine", q.seq, q.bs, kind)
         t0 = time.perf_counter()
@@ -224,19 +257,21 @@ class AnalyticalBackend:
         compile_s = time.perf_counter() - t0
 
         mb = memory_analysis_bytes(compiled)
-        gamma_mb = (mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6
+        gamma_mb = dev.round_alloc(
+            mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6
         cost = parse_hlo_cost(compiled.as_text())
-        compute_s = cost.flops / hw["peak_flops_bf16"]
-        memory_s = cost.hbm_bytes / hw["hbm_bw"]
-        coll_s = cost.collective_bytes / hw["ici_bw"]
-        phi_ms = max(compute_s, memory_s, coll_s) * 1e3
+        compute_s = cost.flops / dev.peak_flops
+        memory_s = cost.hbm_bytes / dev.hbm_bw
+        coll_s = cost.collective_bytes / dev.ici_bw
+        phi_ms = dev.combine_terms(compute_s, memory_s, coll_s) * 1e3
         terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
         return CostEstimate(
             gamma_mb=float(gamma_mb), phi_ms=float(phi_ms), source=self.name,
             detail={"flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
                     "collective_bytes": cost.collective_bytes,
                     "dominant": max(terms, key=terms.get),
-                    "compile_s": compile_s, "reduced": self.reduced})
+                    "device": dev.name,
+                    "compile_s": compile_s, "reduced": reduced})
 
 
 class ProfilerBackend:
@@ -309,8 +344,27 @@ class EnsembleBackend:
             try:
                 ests = backend.estimate([queries[i] for i in idx])
             except BackendUnavailable as e:
-                failures.append(f"{backend.name}: {e}")
-                last_exc = e
+                # One poisoned query (e.g. an arch that fails to compile)
+                # must not discard the whole batch's answerable queries:
+                # retry per query so only the failing ones fall through.
+                if len(idx) > 1:
+                    salvaged = 0
+                    for i in idx:
+                        try:
+                            results[i] = backend.estimate([queries[i]])[0]
+                            salvaged += 1
+                        except BackendUnavailable as e2:
+                            last_exc = e2
+                    if salvaged:
+                        failures.append(
+                            f"{backend.name}: answered {salvaged}/{len(idx)}"
+                            f" after batch failure ({e})")
+                    else:
+                        failures.append(f"{backend.name}: {e}")
+                else:
+                    failures.append(f"{backend.name}: {e}")
+                    last_exc = e
+                remaining = [i for i in remaining if results[i] is None]
                 continue
             for i, est in zip(idx, ests):
                 results[i] = est

@@ -10,6 +10,8 @@ geometry.
 
 from __future__ import annotations
 
+import copy
+
 from repro.core.fileio import atomic_write_json, load_json_tolerant
 from repro.engine.types import CostEstimate
 
@@ -23,10 +25,19 @@ class EstimateCache:
 
     def get(self, key: str) -> CostEstimate | None:
         d = self._data.get(key)
-        return CostEstimate.from_dict(d) if d else None
+        if not d:
+            return None
+        est = CostEstimate.from_dict(d)
+        est.detail = dict(est.detail)   # callers may annotate their copy
+        return est
 
     def put(self, key: str, est: CostEstimate) -> None:
-        self._data[key] = est.to_dict()
+        # Deep-copy the detail dict: the estimate object stays live with the
+        # caller, and post-call annotations (possibly non-JSON values) must
+        # not leak into — or break the flush of — the on-disk cache.
+        d = est.to_dict()
+        d["detail"] = copy.deepcopy(d["detail"])
+        self._data[key] = d
 
     def flush(self) -> None:
         atomic_write_json(self.path, self._data)

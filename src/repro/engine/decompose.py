@@ -1,0 +1,49 @@
+"""The train-step compute/byte decomposition — single source of truth.
+
+The calibration fit (``engine/calibrate.py``) solves for device constants
+over exactly these regressors, and the analytical prediction path
+(``engine/backends.AnalyticalBackend``) multiplies the same regressors by
+the fitted constants.  They MUST stay byte-identical: a drift between the
+two (e.g. one side changing what counts as "bytes moved") silently skews
+every calibrated prediction with nothing failing loudly.  Hence one
+module, consumed by both.
+
+All functions take a ``(N, F)`` Appendix-B feature matrix (rows =
+workloads, columns = ``core.features.FEATURE_NAMES`` order, train stage)
+and return per-row arrays.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.features import FEATURE_NAMES
+
+__all__ = ["latency_terms", "memory_terms"]
+
+_I_W = FEATURE_NAMES.index("mem_w")
+_I_IFM = FEATURE_NAMES.index("mem_ifm_grad")
+_I_OFM = FEATURE_NAMES.index("mem_ofm_grad")
+_I_ALLOC = FEATURE_NAMES.index("mem_alloc_total")
+_I_OPS = FEATURE_NAMES.index("mm_ops_sum")
+_I_I2C = FEATURE_NAMES.index("mm_i2c_total_sum")
+
+
+def latency_terms(feats: np.ndarray, bytes_per_el: int) -> tuple[np.ndarray, np.ndarray]:
+    """(flops, bytes_moved) per training-step workload: FLOPs are 2× the
+    fwd+bwd MAC count; traffic is the allocation total plus the im2col
+    lowering volume."""
+    F = np.atleast_2d(np.asarray(feats, dtype=np.float64))
+    flops = 2.0 * F[:, _I_OPS]
+    bytes_moved = bytes_per_el * (F[:, _I_ALLOC] + F[:, _I_I2C])
+    return flops, bytes_moved
+
+
+def memory_terms(feats: np.ndarray, bytes_per_el: int) -> tuple[np.ndarray, np.ndarray]:
+    """(weight_bytes, activation_bytes) per training-step workload — the
+    two allocation families whose per-device scales the memory fit solves
+    for (weights scale with optimizer/grad copies, activations with batch)."""
+    F = np.atleast_2d(np.asarray(feats, dtype=np.float64))
+    weight_bytes = bytes_per_el * F[:, _I_W]
+    act_bytes = bytes_per_el * (F[:, _I_IFM] + F[:, _I_OFM])
+    return weight_bytes, act_bytes

@@ -1,0 +1,318 @@
+"""Device registry: named hardware constants behind every cost estimate.
+
+perf4sight's models are *per-device* (paper §5): the same topology costs
+differently on a TX2 than on a workstation, so the constants that turn
+compute/byte decompositions into seconds and megabytes must be first-class,
+named, and swappable — not literals buried in a backend.  A
+:class:`DeviceSpec` carries the roofline denominators (peak FLOP/s, memory
+bandwidth, interconnect bandwidth), the fitted latency constants (kernel
+launch overhead, term-combination mode) and the fitted memory constants
+(allocator granularity, weight/activation scale, base footprint).
+
+Specs come from three places:
+
+* the built-in registry (``host_cpu``, ``tx2_like``, ``tpu_v5e``) — coarse
+  datasheet guesses, ``calibrated=False``;
+* :func:`repro.engine.calibrate.calibrate` — constants fitted against
+  :class:`~repro.engine.backends.ProfilerBackend` ground truth,
+  ``calibrated=True``;
+* :func:`from_jax_device` — auto-derived from a live ``jax.devices()``
+  entry (platform heuristics, still uncalibrated).
+
+``fingerprint()`` hashes every constant that affects a prediction; the
+engine salts estimate-cache keys with it so calibrated and uncalibrated
+estimates can never collide on disk.  Fitted specs persist through the
+atomic ``core/fileio`` helpers as JSON (inspectable) or NPZ (compact),
+chosen by extension.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import math
+import os
+from dataclasses import asdict, dataclass, field, replace
+
+__all__ = [
+    "DeviceSpec",
+    "DEVICE_REGISTRY",
+    "get_device",
+    "register_device",
+    "list_devices",
+    "resolve_device",
+    "from_jax_device",
+    "save_device_spec",
+    "load_device_spec",
+]
+
+# Constants that change predictions — exactly the fields the fingerprint
+# (and therefore every estimate-cache key) must be sensitive to.
+# ``calibrated`` is included because the analytical backend branches on it
+# (fitted memory model, infer-stage combine), not just on the constants.
+FITTED_FIELDS = (
+    "peak_flops",
+    "hbm_bw",
+    "ici_bw",
+    "hbm_bytes",
+    "launch_overhead_s",
+    "alloc_granularity",
+    "mem_weight_scale",
+    "mem_act_scale",
+    "mem_base_mb",
+    "combine",
+    "calibrated",
+)
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    """Hardware constants of one device, guessed or fitted.
+
+    Latency model (``AnalyticalBackend``):
+
+        phi_s = launch_overhead_s + combine(flops / peak_flops,
+                                            bytes_moved / hbm_bw)
+
+    where ``combine`` is ``max`` (classic roofline, the uncalibrated
+    default) or ``sum`` (the additive relaxation the NNLS calibration
+    fits — overlap folded into the fitted denominators).
+
+    Memory model:
+
+        gamma_mb = mem_base_mb + mem_weight_scale * weight_mb
+                              + mem_act_scale   * activation_mb
+
+    with byte totals rounded up to ``alloc_granularity``.  The uncalibrated
+    defaults (scale 1, base 0, granularity 1) leave the raw Appendix-B
+    allocation totals untouched.
+    """
+
+    name: str
+    peak_flops: float                  # FLOP/s
+    hbm_bw: float                      # B/s
+    ici_bw: float = 1e9                # B/s (interconnect / collective)
+    hbm_bytes: float = 4e9             # memory capacity
+    launch_overhead_s: float = 0.0     # fixed per-step dispatch cost
+    alloc_granularity: int = 1         # allocator rounding (bytes)
+    mem_weight_scale: float = 1.0      # measured MB per modeled weight MB
+    mem_act_scale: float = 1.0         # measured MB per modeled activation MB
+    mem_base_mb: float = 0.0           # fixed runtime footprint
+    combine: str = "max"               # "max" roofline | "sum" calibrated
+    calibrated: bool = False
+    meta: dict = field(default_factory=dict, compare=False)
+
+    def __post_init__(self):
+        if self.peak_flops <= 0 or self.hbm_bw <= 0:
+            raise ValueError(f"non-positive roofline denominator: {self}")
+        if self.combine not in ("max", "sum"):
+            raise ValueError(f"combine must be 'max' or 'sum', got {self.combine!r}")
+        if self.alloc_granularity < 1:
+            raise ValueError(f"alloc_granularity must be >= 1: {self}")
+
+    # -- prediction helpers --------------------------------------------------
+
+    def combine_terms(self, *terms_s: float) -> float:
+        """Fold roofline terms into seconds, plus the launch overhead."""
+        folded = max(terms_s) if self.combine == "max" else sum(terms_s)
+        return self.launch_overhead_s + folded
+
+    def round_alloc(self, nbytes: float) -> float:
+        """Round a byte total up to the allocator granularity."""
+        g = self.alloc_granularity
+        return nbytes if g <= 1 else math.ceil(nbytes / g) * g
+
+    # -- identity ------------------------------------------------------------
+
+    def fingerprint(self) -> str:
+        """Hash of every fitted constant (not the name or meta).
+
+        Deliberately conservative: ``hbm_bytes`` only affects admission
+        budgets, not estimates, but is still in the key — editing a spec's
+        capacity invalidates its cached estimates (a harmless recompute)
+        rather than risking any constant change silently aliasing."""
+        blob = json.dumps([getattr(self, f) for f in FITTED_FIELDS])
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    def hw_table(self) -> dict:
+        """Legacy roofline dict (``core/roofline.py`` key names)."""
+        return {
+            "peak_flops_bf16": self.peak_flops,
+            "hbm_bw": self.hbm_bw,
+            "ici_bw": self.ici_bw,
+            "hbm_bytes": self.hbm_bytes,
+        }
+
+    # -- serialization -------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DeviceSpec":
+        known = {f for f in cls.__dataclass_fields__}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    @classmethod
+    def from_hw_table(cls, hw: dict, name: str = "custom") -> "DeviceSpec":
+        """Adopt a legacy ``{"peak_flops_bf16": ..., "hbm_bw": ...}`` dict."""
+        return cls(
+            name=name,
+            peak_flops=float(hw["peak_flops_bf16"]),
+            hbm_bw=float(hw["hbm_bw"]),
+            ici_bw=float(hw.get("ici_bw", 1e9)),
+            hbm_bytes=float(hw.get("hbm_bytes", 4e9)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry.  host_cpu carries the constants that used to live as the
+# HOST_CPU literal in engine/backends.py; tx2_like approximates the paper's
+# Jetson TX2 (§6: 256-core Pascal, 8 GB unified LPDDR4); tpu_v5e mirrors
+# launch/mesh.TPU_V5E for the LM/HLO path.
+# ---------------------------------------------------------------------------
+
+DEVICE_REGISTRY: dict[str, DeviceSpec] = {}
+
+
+def register_device(spec: DeviceSpec, *, overwrite: bool = False) -> DeviceSpec:
+    if spec.name in DEVICE_REGISTRY and not overwrite:
+        raise ValueError(f"device {spec.name!r} already registered")
+    DEVICE_REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_device(name: str) -> DeviceSpec:
+    try:
+        return DEVICE_REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown device {name!r}; registered: {sorted(DEVICE_REGISTRY)}"
+        ) from None
+
+
+def list_devices() -> list[str]:
+    return sorted(DEVICE_REGISTRY)
+
+
+register_device(DeviceSpec(
+    name="host_cpu",
+    peak_flops=5e10,        # 1-core CPU stand-in for the edge device
+    hbm_bw=2e10,
+    ici_bw=1e9,             # loopback; collectives are degenerate
+    hbm_bytes=4e9,
+))
+
+register_device(DeviceSpec(
+    name="tx2_like",
+    peak_flops=1.33e12,     # TX2 256-core Pascal, fp16
+    hbm_bw=59.7e9,          # LPDDR4 128-bit
+    ici_bw=1e9,
+    hbm_bytes=8e9,          # unified memory
+    launch_overhead_s=2e-4, # CUDA kernel dispatch per step (order-of-magnitude)
+    alloc_granularity=512,  # CUDA caching-allocator block rounding
+))
+
+register_device(DeviceSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16e9,
+))
+
+
+# ---------------------------------------------------------------------------
+# Resolution and auto-derivation.
+# ---------------------------------------------------------------------------
+
+
+def resolve_device(device, default: str = "host_cpu") -> DeviceSpec:
+    """Turn any accepted device description into a :class:`DeviceSpec`.
+
+    Accepts a spec (returned as-is), a registry name, a path to a persisted
+    spec (``.json`` / ``.npz``), a legacy hardware-constant dict, or ``None``
+    (the registry ``default``).
+    """
+    if device is None:
+        return get_device(default)
+    if isinstance(device, DeviceSpec):
+        return device
+    if isinstance(device, dict):
+        return DeviceSpec.from_hw_table(device)
+    if isinstance(device, str):
+        if device in DEVICE_REGISTRY:
+            return get_device(device)
+        if device.endswith((".json", ".npz")) or os.sep in device:
+            return load_device_spec(device)
+        return get_device(device)  # raises with the registered names
+    raise TypeError(f"cannot resolve a DeviceSpec from {device!r}")
+
+
+def from_jax_device(dev=None) -> DeviceSpec:
+    """Derive an (uncalibrated) spec from a live jax device: the registry
+    template for its platform, named after the device kind, with the memory
+    capacity read from ``memory_stats()`` when the runtime exposes it."""
+    if dev is None:
+        import jax
+
+        dev = jax.devices()[0]
+    platform = getattr(dev, "platform", "cpu")
+    base = get_device({"tpu": "tpu_v5e", "gpu": "tx2_like"}.get(platform, "host_cpu"))
+    kind = getattr(dev, "device_kind", platform) or platform
+    name = "jax_" + "".join(c if c.isalnum() else "_" for c in str(kind).lower())
+    hbm = base.hbm_bytes
+    try:
+        stats = dev.memory_stats() or {}
+        hbm = float(stats.get("bytes_limit", hbm)) or hbm
+    except Exception:
+        pass
+    spec = replace(base, name=name, hbm_bytes=hbm,
+                   meta={"platform": platform, "device_kind": str(kind)})
+    # Overwrite any previous derivation: the registry entry and the returned
+    # spec must agree (memory_stats can change between calls, e.g. with XLA
+    # preallocation settings — a stale entry would give resolve_device(name)
+    # a different capacity than the spec the caller just received).
+    return register_device(spec, overwrite=True)
+
+
+# ---------------------------------------------------------------------------
+# Persistence (atomic, JSON or NPZ by extension — the fileio contract every
+# on-disk artifact in this repo follows).
+# ---------------------------------------------------------------------------
+
+
+def save_device_spec(path: str, spec: DeviceSpec) -> None:
+    from repro.core.fileio import atomic_write_bytes, atomic_write_json
+
+    if path.endswith(".npz"):
+        import numpy as np
+
+        arrays = {
+            f: np.asarray(getattr(spec, f))
+            for f in FITTED_FIELDS
+            if f != "combine"
+        }
+        header = json.dumps({"name": spec.name, "combine": spec.combine,
+                             "meta": spec.meta})
+        arrays["header"] = np.frombuffer(header.encode(), dtype=np.uint8)
+        atomic_write_bytes(path, lambda f: np.savez_compressed(f, **arrays),
+                           suffix=".npz")
+    else:
+        atomic_write_json(path, spec.to_dict())
+
+
+def load_device_spec(path: str) -> DeviceSpec:
+    if path.endswith(".npz"):
+        import numpy as np
+
+        with np.load(path) as z:
+            header = json.loads(bytes(z["header"].tobytes()).decode())
+            d = {f: z[f].item() for f in FITTED_FIELDS if f != "combine"}
+            d["alloc_granularity"] = int(d["alloc_granularity"])
+            d["calibrated"] = bool(d["calibrated"])
+            d.update(name=header["name"], combine=header["combine"],
+                     meta=header.get("meta", {}))
+            return DeviceSpec(**d)
+    with open(path) as f:
+        return DeviceSpec.from_dict(json.load(f))

@@ -13,6 +13,7 @@ from __future__ import annotations
 import hashlib
 
 from repro.engine.cache import EstimateCache
+from repro.engine.devices import resolve_device
 from repro.engine.types import CostBackend, CostEstimate, CostQuery
 
 __all__ = ["CostEngine"]
@@ -35,10 +36,14 @@ class CostEngine:
     """
 
     def __init__(self, backend: CostBackend, cache: EstimateCache | str | None = None,
-                 *, flush_every: int = 1):
+                 *, flush_every: int = 1, device=None):
         self.backend = backend
         self.cache = EstimateCache(cache) if isinstance(cache, str) else cache
         self.flush_every = max(1, int(flush_every))
+        # Optional engine-level device: an extra salt over the backend's own
+        # (so two engines serving different devices through one device-less
+        # backend never alias), and the default admission capacity.
+        self.device = resolve_device(device) if device is not None else None
         self.hits = 0
         self.misses = 0
         self._pending = 0
@@ -48,7 +53,10 @@ class CostEngine:
         # the salt (the expensive part — the forest content hash — is
         # memoized per packing on the forest itself).
         salt_fn = getattr(self.backend, "cache_salt", None)
-        return salt_fn() if callable(salt_fn) else self.backend.name
+        salt = salt_fn() if callable(salt_fn) else self.backend.name
+        if self.device is not None:
+            salt = f"{salt}@{self.device.fingerprint()}"
+        return salt
 
     def estimate(self, queries: list[CostQuery]) -> list[CostEstimate]:
         """Answer a batch of queries: cache first, then ONE batched backend
@@ -102,7 +110,11 @@ class CostEngine:
     ) -> tuple[bool, dict]:
         """Admission gate (paper §6.4 safety property), backend-agnostic:
         refuse when the predicted footprint/latency, inflated by
-        ``safety_margin``, exceeds the budget."""
+        ``safety_margin``, exceeds the budget.  With an engine-level device
+        and no explicit memory budget, the device's capacity is the budget.
+        """
+        if gamma_budget_mb is None and self.device is not None:
+            gamma_budget_mb = self.device.hbm_bytes / 1e6
         est = self.estimate_one(query)
         g_eff = est.gamma_mb * (1 + safety_margin)
         p_eff = est.phi_ms * (1 + safety_margin)

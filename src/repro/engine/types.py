@@ -56,6 +56,8 @@ class CostQuery:
     spec: NetworkSpec | None = None
     arch: str | None = None
     seq: int = 64                      # LM-only: sequence length
+    reduced: bool | None = None        # LM-only: smoke-scale config variant;
+    #                                    None defers to the backend's default
     model: Any = field(default=None, compare=False, hash=False, repr=False)
 
     def __post_init__(self):
@@ -89,7 +91,8 @@ class CostQuery:
                          sorted(getattr(self.model, "widths", {}).items())]
         blob = json.dumps(
             {"id": ident, "bs": self.bs, "stage": self.stage,
-             "seq": self.seq if self.arch is not None else None},
+             "seq": self.seq if self.arch is not None else None,
+             "reduced": self.reduced if self.arch is not None else None},
             sort_keys=True,
         )
         return hashlib.sha1(blob.encode()).hexdigest()

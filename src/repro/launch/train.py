@@ -34,9 +34,15 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--grad-compression", type=float, default=None)
+    ap.add_argument("--device", default=None,
+                    help="device registry name (host_cpu, tx2_like, tpu_v5e) "
+                         "or path to a calibrated DeviceSpec (.json/.npz) — "
+                         "sets the admission roofline constants and, absent "
+                         "--memory-budget-gb, the memory capacity budget")
     ap.add_argument("--memory-budget-gb", type=float, default=None,
                     help="admission gate: refuse if predicted HBM (inflated "
-                         "by --admission-margin) exceeds this")
+                         "by --admission-margin) exceeds this; defaults to "
+                         "the --device capacity when a device is given")
     ap.add_argument("--admission-margin", type=float, default=0.1,
                     help="safety margin applied to the predicted footprint "
                          "before comparing to the budget (0 = exact)")
@@ -48,27 +54,35 @@ def main() -> None:
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
 
     admission = None
-    if args.memory_budget_gb is not None:
+    if args.memory_budget_gb is not None or args.device is not None:
         from repro.engine import (
             AnalyticalBackend,
             CostEngine,
             CostQuery,
             EnsembleBackend,
+            resolve_device,
         )
 
+        device = resolve_device(args.device) if args.device else None
         engine = CostEngine(
-            EnsembleBackend([AnalyticalBackend(reduced=args.reduced)]),
+            EnsembleBackend([AnalyticalBackend(reduced=args.reduced,
+                                               lm_device=device)]),
             cache=args.estimate_cache,
+            device=device,
         )
 
         def admission(cfg, shape):
             ok, info = engine.admit(
                 CostQuery(arch=args.arch, bs=shape.global_batch,
-                          seq=shape.seq_len, stage="train"),
-                gamma_budget_mb=args.memory_budget_gb * 1e3,
+                          seq=shape.seq_len, stage="train",
+                          reduced=args.reduced),
+                gamma_budget_mb=(args.memory_budget_gb * 1e3
+                                 if args.memory_budget_gb is not None else None),
                 safety_margin=args.admission_margin,
             )
             info["predicted_gb"] = info["gamma_mb"] / 1e3
+            if device is not None:
+                info["device"] = device.name
             return ok, info
 
     opt = OptimizerConfig(kind="adamw", lr=args.lr, warmup_steps=10,

@@ -5,6 +5,12 @@ sequences (EOS or max length) free their slot for the next queued request.
 Sampling is greedy or temperature-based.  The decode step is a single jitted
 function reused across the whole serving lifetime (shape-stable: the cache
 is allocated once at ``max_len``).
+
+Placement runs through the same cost-engine admission gate as the training
+launcher (paper §6.4 safety property): configure ``ServeConfig.device`` (a
+device-registry name or a calibrated spec) and the engine predicts the
+serving footprint before allocating slots, refusing placements that exceed
+the device's memory — instead of OOM-killing a co-located process.
 """
 
 from __future__ import annotations
@@ -18,7 +24,11 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 
-__all__ = ["ServeConfig", "ServeEngine"]
+__all__ = ["ServeConfig", "ServeEngine", "PlacementRefused"]
+
+
+class PlacementRefused(RuntimeError):
+    """The admission gate predicted this serving cell exceeds the device."""
 
 
 @dataclass
@@ -28,13 +38,22 @@ class ServeConfig:
     temperature: float = 0.0     # 0 = greedy
     eos_id: int = 1
     seed: int = 0
+    # placement admission (off unless a device or budget is configured)
+    device: "str | object | None" = None   # registry name / DeviceSpec / path
+    gamma_budget_mb: float | None = None   # None + device → device capacity
+    admission_margin: float = 0.1
 
 
 class ServeEngine:
-    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig | None = None):
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig | None = None,
+                 cost_engine=None):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.params = params
+        self.admission_info: dict | None = None
+        if (cost_engine is not None or self.scfg.device is not None
+                or self.scfg.gamma_budget_mb is not None):
+            self._admit(cost_engine)
         B, L = self.scfg.n_slots, self.scfg.max_len
 
         self._prefill = jax.jit(
@@ -46,6 +65,60 @@ class ServeEngine:
         self._rng = np.random.default_rng(self.scfg.seed)
 
     # ------------------------------------------------------------------
+
+    def _admit(self, cost_engine) -> None:
+        """Predict the serving-cell footprint (prefill at n_slots × max_len)
+        and refuse placement over budget — same gate as launch/train.py."""
+        from repro.engine import (
+            AnalyticalBackend,
+            BackendUnavailable,
+            CostEngine,
+            CostQuery,
+            resolve_device,
+        )
+
+        device = (resolve_device(self.scfg.device)
+                  if self.scfg.device is not None else None)
+        # Registry convention: ArchConfig.reduced() appends "-smoke" to the
+        # name.  The gate must predict the config actually being served —
+        # querying the registry id of a full config with reduced=True would
+        # estimate the tiny smoke variant and admit anything.
+        arch, reduced = self.cfg.name, False
+        if arch.endswith("-smoke"):
+            arch, reduced = arch[: -len("-smoke")], True
+        engine = cost_engine or CostEngine(
+            AnalyticalBackend(lm_device=device, reduced=reduced),
+            device=device)
+        budget = self.scfg.gamma_budget_mb
+        if budget is None and device is not None and cost_engine is not None:
+            # An externally-supplied engine may not carry our device: the
+            # configured device's capacity must still gate placement.
+            budget = device.hbm_bytes / 1e6
+        # reduced travels IN the query: an external engine whose backend
+        # defaults to the other variant must still cost the served config.
+        query = CostQuery(arch=arch, bs=self.scfg.n_slots,
+                          seq=self.scfg.max_len, stage="infer",
+                          reduced=reduced)
+        try:
+            ok, info = engine.admit(
+                query,
+                gamma_budget_mb=budget,
+                safety_margin=self.scfg.admission_margin,
+            )
+        except BackendUnavailable as e:
+            # Unknown arch id / uncompilable cell: placement proceeds
+            # ungated rather than refusing workloads the model can't score.
+            self.admission_info = {"skipped": str(e)}
+            return
+        if device is not None:
+            info["device"] = device.name
+        self.admission_info = info
+        if not ok:
+            raise PlacementRefused(
+                f"serving cell {self.cfg.name} n_slots={self.scfg.n_slots} "
+                f"max_len={self.scfg.max_len} predicted "
+                f"{info['gamma_eff']:.0f}MB effective > budget "
+                f"({info})")
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
         logits = np.asarray(logits[:, -1].astype(jnp.float32))

@@ -13,7 +13,7 @@ from repro.core.dataset import Datapoint, DatasetCache
 from repro.core.features import network_features
 from repro.core.predictor import Perf4Sight
 from repro.core.pruning import pruned_model
-from repro.core.search import Constraints, evolutionary_search
+from repro.core.search import Constraints, evolutionary_search, fold_population
 from repro.engine import (
     AnalyticalBackend,
     BackendUnavailable,
@@ -79,6 +79,33 @@ def test_query_validation():
         CostQuery(bs=8)  # no spec/arch/model
     with pytest.raises(ValueError):
         CostQuery(bs=8, arch="qwen3-4b", stage="decode")
+
+
+def test_arch_query_key_sensitive_to_reduced():
+    base = CostQuery(bs=8, arch="qwen3-4b")
+    assert CostQuery(bs=8, arch="qwen3-4b", reduced=True).key != base.key
+    assert CostQuery(bs=8, arch="qwen3-4b", reduced=False).key != base.key
+    assert (CostQuery(bs=8, arch="qwen3-4b", reduced=True).key
+            != CostQuery(bs=8, arch="qwen3-4b", reduced=False).key)
+
+
+def test_feature_matrix_tolerates_layerless_specs():
+    """The vectorized path must return zeros (like the scalar reference),
+    not crash on a float64 empty index array."""
+    from repro.core.features import NetworkSpec, feature_matrix
+
+    X = feature_matrix([(NetworkSpec("empty"), 4)])
+    assert X.shape[0] == 1 and (X == 0).all()
+
+
+def test_load_json_tolerant_quarantines_non_dict(tmp_path):
+    from repro.core.fileio import load_json_tolerant
+
+    path = str(tmp_path / "cache.json")
+    with open(path, "w") as f:
+        f.write("[1, 2, 3]")   # valid JSON, wrong shape
+    assert load_json_tolerant(path) == {}
+    assert os.path.exists(path + ".corrupt")
 
 
 # -- ForestBackend parity ----------------------------------------------------
@@ -173,7 +200,54 @@ def test_ensemble_falls_through_unsupported_and_failing(candidate_specs):
     ens = EnsembleBackend([unsupported, failing, answering])
     ests = ens.estimate([CostQuery(spec=candidate_specs[0], bs=4)] * 3)
     assert all(e.source == "answering" for e in ests)
-    assert failing.calls == 1  # tried, dropped out
+    # tried on the batch, then per-query salvage retries, then dropped out
+    assert failing.calls == 1 + 3
+
+
+class _PartialBackend:
+    """Answers queries individually but raises on any batch containing a
+    poisoned query — the AnalyticalBackend arch-compile-failure shape."""
+
+    name = "partial"
+
+    def __init__(self, poisoned: set):
+        self.poisoned = poisoned
+
+    def supports(self, q):
+        return True
+
+    def estimate(self, queries):
+        if any(q.bs in self.poisoned for q in queries):
+            raise BackendUnavailable("poisoned query in batch")
+        return [CostEstimate(gamma_mb=1.0, phi_ms=1.0, source=self.name)
+                for _ in queries]
+
+
+def test_ensemble_one_poisoned_query_does_not_discard_batch(candidate_specs):
+    """A single failing query must not push the whole batch to the next
+    link: the ensemble retries per query and only the poisoned one falls
+    through."""
+    fallback = _StubBackend("fallback", answer=9.0)
+    ens = EnsembleBackend([_PartialBackend(poisoned={13}), fallback])
+    qs = [CostQuery(spec=candidate_specs[0], bs=bs) for bs in (2, 13, 4)]
+    ests = ens.estimate(qs)
+    assert [e.source for e in ests] == ["partial", "fallback", "partial"]
+    assert fallback.calls == 1  # only the poisoned query reached it
+
+
+def test_cache_isolated_from_caller_detail_mutation(candidate_specs, tmp_path):
+    """Annotating a returned estimate's detail (even with non-JSON values)
+    must neither break the cache flush nor leak into future hits."""
+    path = str(tmp_path / "estimates.json")
+    engine = CostEngine(_StubBackend("s", answer=1.0),
+                        cache=EstimateCache(path), flush_every=10)
+    q = CostQuery(spec=candidate_specs[0], bs=8)
+    est = engine.estimate_one(q)
+    est.detail["annotation"] = object()     # not JSON-serializable
+    engine.flush()                          # deferred write must not raise
+    hit = CostEngine(_StubBackend("s", answer=1.0),
+                     cache=EstimateCache(path)).estimate_one(q)
+    assert hit.detail.get("cached") and "annotation" not in hit.detail
 
 
 def test_ensemble_exhausted_raises(candidate_specs):
@@ -361,6 +435,40 @@ def test_search_uses_batched_estimates(predictor):
     assert len(calls) == 8
     assert calls[0] == 12  # whole population in ONE call
     assert r.evaluations == 12 + 3 * 9  # pop + iter × (pop - parents)
+
+
+def test_fold_population_unit():
+    w1, w2 = {"a": 4, "b": 8}, {"a": 2, "b": 8}
+    uniq, fan_in = fold_population([w1, w2, dict(w1), w1])
+    assert uniq == [w1, w2]
+    assert fan_in == [0, 1, 0, 0]
+
+
+def test_population_dedup_folds_identical_candidates(predictor, monkeypatch):
+    """ROADMAP dedup item: N identical candidates in a generation must reach
+    the engine as ONE query per stage (estimate call fan-in == n_unique),
+    while per-candidate results still fan back out."""
+    import repro.core.search as S
+
+    calls = []
+
+    class _SpyEngine(CostEngine):
+        def estimate(self, queries):
+            calls.append(len(queries))
+            return super().estimate(queries)
+
+    # force a fully-degenerate initial population: every candidate identical
+    monkeypatch.setattr(
+        S, "sample_subnetwork",
+        lambda canonical, rng, min_ch=2: {g: max(min_ch, n // 2)
+                                          for g, n in canonical.items()})
+    engine = _SpyEngine(ForestBackend(train=predictor, infer=predictor))
+    r = evolutionary_search(
+        "squeezenet", engine, Constraints(gamma_mb=1e9, train_bs=8, infer_bs=1),
+        population=10, iterations=0, width_mult=WM, input_hw=HW, seed=0)
+    assert r.evaluations == 10          # every candidate was scored...
+    assert calls == [1, 1]              # ...from one query per stage
+    assert r.fitness > 0
 
 
 def test_batched_estimate_5x_faster_than_scalar(predictor):

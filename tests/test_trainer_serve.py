@@ -10,7 +10,7 @@ from repro.configs.base import ShapeSpec
 from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.optim.optimizer import OptimizerConfig
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import PlacementRefused, ServeConfig, ServeEngine
 from repro.train.trainer import StragglerMonitor, Trainer, TrainerConfig
 
 SMOKE_SHAPE = ShapeSpec("smoke", seq_len=32, global_batch=4, kind="train")
@@ -92,6 +92,78 @@ def test_serve_engine_greedy_generate():
     assert out["tokens"].shape[0] == 2
     assert 1 <= out["tokens"].shape[1] <= 6
     assert out["decode_steps"] >= 1
+
+
+class _StubCostEngine:
+    """CostEngine stand-in: fixed admit verdict, records the query."""
+
+    def __init__(self, ok, gamma_mb=100.0):
+        self.ok = ok
+        self.gamma_mb = gamma_mb
+        self.queries = []
+
+    def admit(self, query, *, gamma_budget_mb=None, phi_budget_ms=None,
+              safety_margin=0.1):
+        self.queries.append(query)
+        self.budgets = getattr(self, "budgets", [])
+        self.budgets.append(gamma_budget_mb)
+        return self.ok, {"gamma_mb": self.gamma_mb, "phi_ms": 1.0,
+                         "gamma_eff": self.gamma_mb * (1 + safety_margin),
+                         "phi_eff": 1.1, "source": "stub"}
+
+
+def test_serve_placement_admission_refuses_over_budget():
+    cfg = _cfg()
+    params = T.init_params(cfg, 0)
+    gate = _StubCostEngine(ok=False)
+    with pytest.raises(PlacementRefused):
+        ServeEngine(cfg, params,
+                    ServeConfig(max_len=64, n_slots=2, gamma_budget_mb=1.0),
+                    cost_engine=gate)
+    q = gate.queries[0]
+    # _cfg() is the reduced "-smoke" variant: the gate must map it back to
+    # the registry id and carry reduced-ness IN the query, so any engine
+    # (whatever its backend's default) costs the config actually served
+    assert cfg.name == "internlm2-1.8b-smoke"
+    assert (q.arch, q.bs, q.seq, q.stage) == ("internlm2-1.8b", 2, 64, "infer")
+    assert q.reduced is True
+
+
+def test_serve_placement_admission_admits_and_serves():
+    cfg = _cfg()
+    params = T.init_params(cfg, 0)
+    gate = _StubCostEngine(ok=True)
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(max_len=64, n_slots=2, eos_id=0,
+                                  gamma_budget_mb=1e6),
+                      cost_engine=gate)
+    assert eng.admission_info["source"] == "stub"
+    prompts = np.random.default_rng(0).integers(
+        1, cfg.vocab, (2, 8)).astype(np.int32)
+    out = eng.generate(prompts, max_new_tokens=4)
+    assert out["tokens"].shape[0] == 2
+
+
+def test_serve_device_capacity_budgets_external_engine():
+    """A configured device must gate placement even through an externally
+    supplied cost engine that doesn't carry it: the device's capacity
+    becomes the budget."""
+    from repro.engine import get_device
+
+    cfg = _cfg()
+    params = T.init_params(cfg, 0)
+    gate = _StubCostEngine(ok=True)
+    ServeEngine(cfg, params,
+                ServeConfig(max_len=64, n_slots=2, device="tx2_like"),
+                cost_engine=gate)
+    assert gate.budgets == [get_device("tx2_like").hbm_bytes / 1e6]
+
+
+def test_serve_without_device_or_budget_skips_gate():
+    cfg = _cfg()
+    params = T.init_params(cfg, 0)
+    eng = ServeEngine(cfg, params, ServeConfig(max_len=64, n_slots=2))
+    assert eng.admission_info is None
 
 
 def test_serve_deterministic_greedy():
