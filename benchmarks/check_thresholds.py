@@ -1,0 +1,73 @@
+"""Nightly benchmark regression gate (ROADMAP: scheduled job running
+engine_bench + kernel_bench with speedup/accuracy thresholds that fail
+the job).
+
+Runs both benchmarks in-process and enforces:
+
+* engine batched-vs-scalar speedup ≥ ``ENGINE_SPEEDUP_MIN`` (acceptance
+  target is 5×; the gate is laxer to absorb CI-runner noise),
+* batched/scalar prediction parity is exact,
+* calibrated accuracy on the golden fixture: phi MAPE ≤ 0.25, gamma
+  MAPE ≤ 0.10 (the fitted targets are 0.15 / 0.04),
+* per kernel, the autotuned config's modelled roofline time is never
+  worse than the hand-coded default (the default is a candidate, so any
+  violation means the cost model or search broke),
+* a second autotune pass over the bench grid is a pure cache hit.
+
+Exit code 1 with a FAIL line per violated threshold.
+
+    PYTHONPATH=src python -m benchmarks.check_thresholds
+"""
+
+from __future__ import annotations
+
+import sys
+
+ENGINE_SPEEDUP_MIN = 3.0
+PHI_MAPE_MAX = 0.25
+GAMMA_MAPE_MAX = 0.10
+PARITY_TOL = 1e-9   # packed-forest float accumulation order (≈1e-14 observed)
+
+
+def main() -> int:
+    from . import engine_bench, kernel_bench
+
+    failures: list[str] = []
+
+    def check(ok: bool, msg: str) -> None:
+        print(("PASS " if ok else "FAIL ") + msg)
+        if not ok:
+            failures.append(msg)
+
+    eng = engine_bench.run()
+    check(eng["speedup"] >= ENGINE_SPEEDUP_MIN,
+          f"engine batched speedup {eng['speedup']:.1f}x >= {ENGINE_SPEEDUP_MIN}x")
+    check(eng["max_dev"] <= PARITY_TOL,
+          f"engine batched/scalar parity dev {eng['max_dev']:.3g} <= {PARITY_TOL}")
+    if "phi_mape_cal" in eng:  # golden fixture present
+        check(eng["phi_mape_cal"] <= PHI_MAPE_MAX,
+              f"calibrated phi MAPE {eng['phi_mape_cal']:.3f} <= {PHI_MAPE_MAX}")
+        check(eng["gamma_mape_cal"] <= GAMMA_MAPE_MAX,
+              f"calibrated gamma MAPE {eng['gamma_mape_cal']:.3f} <= {GAMMA_MAPE_MAX}")
+    else:
+        print("SKIP calibration accuracy (golden fixture absent)")
+
+    kern = kernel_bench.run()
+    for name in ("conv_mm", "flash_attention", "ssm_scan"):
+        r = kern[name]
+        check(r["tuned_us"] <= r["default_us"] * (1 + 1e-9),
+              f"{name} tuned model {r['tuned_us']:.2f}us <= "
+              f"default {r['default_us']:.2f}us ({r['config']})")
+    check(kern["second_call_hits"] == 3 and kern["second_call_misses"] == 0,
+          f"autotune second pass pure cache hit "
+          f"({kern['second_call_hits']} hits, {kern['second_call_misses']} misses)")
+
+    if failures:
+        print(f"\n{len(failures)} threshold(s) violated")
+        return 1
+    print("\nall benchmark thresholds met")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,24 +1,38 @@
 """Kernel micro-benchmarks: static roofline stats per Pallas kernel config
-(FLOPs, HBM bytes, arithmetic intensity, VMEM working set) plus CPU oracle
-wall-time as a correctness-path sanity check.
+(FLOPs, HBM bytes, arithmetic intensity, VMEM working set), CPU oracle
+wall-time as a correctness-path sanity check, and — per kernel — the
+autotuner's pick vs the hand-coded default under the same roofline model
+(tuned modelled time must never be worse: the default is always in the
+candidate set).
 
 Wall-clock of interpret-mode Pallas is meaningless (Python interpreter), so
-the perf numbers reported are the *structural* ones the TPU roofline uses."""
+the perf numbers reported are the *structural* ones the TPU roofline uses.
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench
+"""
 
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.ssm_scan.ref import ssd_ref
+from repro.engine.devices import get_device
+from repro.kernels.autotune import KernelTuner
+from repro.kernels.conv_mm import tiling as conv_tiling
 from repro.kernels.conv_mm.ref import conv_ref
+from repro.kernels.flash_attention import tiling as flash_tiling
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssm_scan import tiling as ssm_tiling
+from repro.kernels.ssm_scan.ref import ssd_ref
 from repro.launch.mesh import TPU_V5E
 
 from .common import csv_line
+
+TUNING_CACHE = "/tmp/perf4sight_kernel_bench_tuning.json"
 
 
 def _time(fn, *args, n=3):
@@ -31,20 +45,52 @@ def _time(fn, *args, n=3):
     return float(np.median(ts)) * 1e6
 
 
-def run(print_fn=print) -> None:
+def _fmt(config: dict) -> str:
+    return " ".join(f"{k}={v}" for k, v in sorted(config.items()))
+
+
+def _tuned_rows(tuner: KernelTuner, kernel: str, shape: dict, print_fn) -> dict:
+    """Emit model_default_us / model_tuned_us rows for one kernel shape."""
+    entry = tuner.explain(kernel, shape)
+    default_us = entry["default_model_us"]
+    tuned_us = entry["model_us"]   # modelled time of the chosen config
+    speedup = default_us / max(tuned_us, 1e-12)
+    print_fn(csv_line(f"kernel/{kernel}/model_default_us", default_us,
+                      _fmt(entry["default_config"])))
+    print_fn(csv_line(f"kernel/{kernel}/model_tuned_us", tuned_us,
+                      f"{_fmt(entry['config'])} speedup={speedup:.2f}x "
+                      f"vmem_kb={entry['vmem_kb']:.0f} "
+                      f"cands={entry['candidates']} "
+                      f"rejected_vmem={entry['rejected_vmem']} "
+                      f"source={entry['source']}"))
+    return {"default_us": default_us, "tuned_us": tuned_us,
+            "speedup": speedup, "config": entry["config"]}
+
+
+def run(print_fn=print) -> dict:
     peak, bw = TPU_V5E["peak_flops_bf16"], TPU_V5E["hbm_bw"]
+    if os.path.exists(TUNING_CACHE):
+        os.unlink(TUNING_CACHE)
+    tuner = KernelTuner(device=get_device("tpu_v5e"), cache=TUNING_CACHE,
+                        measure=False)
+    results: dict = {}
+    rng = np.random.default_rng(0)
 
     # flash attention: (B,H,S,Dh) production-ish tile
     B, H, S, Dh, bq, bk = 1, 8, 2048, 128, 512, 512
     flops = 4.0 * B * H * S * S * Dh * 0.5  # causal
     bytes_ = 2.0 * (B * H * S * Dh * 3 + B * H * S * Dh)
     vmem = (bq * Dh + 2 * bk * Dh) * 2 + bq * Dh * 4
-    rng = np.random.default_rng(0)
     q = jnp.asarray(rng.standard_normal((B, H, S, Dh)), jnp.bfloat16)
     us = _time(jax.jit(lambda q: attention_ref(q, q, q, causal=True)), q)
     print_fn(csv_line("kernel/flash_attn/ref_us", us,
                       f"AI={flops / bytes_:.0f} tpu_roofline_us="
                       f"{max(flops / peak, bytes_ / bw) * 1e6:.1f} vmem_kb={vmem / 1024:.0f}"))
+    results["flash_attention"] = _tuned_rows(
+        tuner, "flash_attention",
+        flash_tiling.shape_key((B, H, S, Dh), (B, H, S, Dh), causal=True,
+                               dtype="bfloat16"),
+        print_fn)
 
     # conv_mm: ResNet-ish layer
     N, HW, C, K, O = 8, 32, 128, 3, 128
@@ -56,6 +102,11 @@ def run(print_fn=print) -> None:
     print_fn(csv_line("kernel/conv_mm/ref_us", us,
                       f"AI={flops / bytes_:.0f} tpu_roofline_us="
                       f"{max(flops / peak, bytes_ / bw) * 1e6:.1f}"))
+    results["conv_mm"] = _tuned_rows(
+        tuner, "conv_mm",
+        conv_tiling.shape_key((N, HW, HW, C), (K, K, C, O), stride=1,
+                              padding=1, dtype="bfloat16"),
+        print_fn)
 
     # ssd: mamba2-780m layer tile
     B2, S2, Hh, P, Nst, ch = 1, 2048, 24, 64, 128, 128
@@ -69,6 +120,29 @@ def run(print_fn=print) -> None:
     print_fn(csv_line("kernel/ssd/ref_us", us,
                       f"AI={flops / bytes_:.0f} tpu_roofline_us="
                       f"{max(flops / peak, bytes_ / bw) * 1e6:.1f}"))
+    results["ssm_scan"] = _tuned_rows(
+        tuner, "ssm_scan",
+        ssm_tiling.shape_key((B2, S2, Hh, P), Nst, dtype="float32"),
+        print_fn)
+
+    # second visit to the whole grid must be pure cache hits (no re-search)
+    h0, m0 = tuner.hits, tuner.misses
+    for kernel, shape in (
+        ("flash_attention", flash_tiling.shape_key(
+            (B, H, S, Dh), (B, H, S, Dh), causal=True, dtype="bfloat16")),
+        ("conv_mm", conv_tiling.shape_key(
+            (N, HW, HW, C), (K, K, C, O), stride=1, padding=1,
+            dtype="bfloat16")),
+        ("ssm_scan", ssm_tiling.shape_key(
+            (B2, S2, Hh, P), Nst, dtype="float32")),
+    ):
+        tuner.tune(kernel, shape)
+    results["second_call_hits"] = tuner.hits - h0
+    results["second_call_misses"] = tuner.misses - m0
+    print_fn(csv_line("kernel/autotune/second_call_hits",
+                      results["second_call_hits"],
+                      f"misses={results['second_call_misses']} expect=3/0"))
+    return results
 
 
 if __name__ == "__main__":

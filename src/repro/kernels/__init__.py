@@ -1,3 +1,42 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas compute kernels (conv_mm, flash_attention, ssm_scan) and the
+block-size autotuner that picks their launch configurations.
+
+Each kernel package ships ``kernel.py`` (the Pallas body), ``ops.py``
+(the jitted public wrapper; block sizes default to autotuned values),
+``ref.py`` (pure-jnp oracle) and ``tiling.py`` (candidate generator +
+static cost model registered with :mod:`repro.kernels.autotune`).
+"""
+
+from repro.kernels.autotune import (
+    KernelCost,
+    KernelTuner,
+    TilingModel,
+    TuningCache,
+    autotune_enabled,
+    get_tiling,
+    get_tuner,
+    largest_dividing_block,
+    list_tilings,
+    register_tiling,
+    roofline_seconds,
+    set_tuner,
+    tuned_config,
+    vmem_ok,
+)
+
+__all__ = [
+    "KernelCost",
+    "KernelTuner",
+    "TilingModel",
+    "TuningCache",
+    "autotune_enabled",
+    "get_tiling",
+    "get_tuner",
+    "largest_dividing_block",
+    "list_tilings",
+    "register_tiling",
+    "roofline_seconds",
+    "set_tuner",
+    "tuned_config",
+    "vmem_ok",
+]

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.autotune import largest_dividing_block
+
 __all__ = ["conv_mm_kernel"]
 
 
@@ -64,8 +66,10 @@ def conv_mm_kernel(
     if padding:
         x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     Hp, Wp = x.shape[1], x.shape[2]
-    block_o = block_o or min(O, 256)
-    assert O % block_o == 0, (O, block_o)
+    # A requested block that doesn't tile O falls back to the largest
+    # dividing block ≤ requested (e.g. O=96, block_o=256 → 96) so arbitrary
+    # channel counts run instead of crashing on a divisibility assert.
+    block_o = largest_dividing_block(O, block_o or min(O, 256))
 
     kernel = functools.partial(
         _conv_body, kh=KH, kw=KW, stride=stride, oh=OH, ow=OW

@@ -1,4 +1,10 @@
-"""Jitted public wrapper for the MM-convolution kernel."""
+"""Jitted public wrapper for the MM-convolution kernel.
+
+``block_o=None`` consults the process autotuner (roofline-ranked,
+device-keyed cache — see ``repro.kernels.autotune``) for this launch
+shape; an explicit ``block_o`` always wins.  Resolution happens outside
+the jit so the tuned value participates in the static-arg cache key.
+"""
 
 from __future__ import annotations
 
@@ -6,6 +12,9 @@ from functools import partial
 
 import jax
 
+from repro.kernels.autotune import tuned_config
+
+from . import tiling
 from .kernel import conv_mm_kernel
 from .ref import conv_ref
 
@@ -13,10 +22,20 @@ __all__ = ["conv_mm"]
 
 
 @partial(jax.jit, static_argnames=("stride", "padding", "block_o", "interpret"))
-def conv_mm(x, w, *, stride=1, padding=0, block_o=None, interpret=False):
+def _conv_mm_jit(x, w, *, stride, padding, block_o, interpret):
     if jax.default_backend() == "tpu" or interpret:
         return conv_mm_kernel(
             x, w, stride=stride, padding=padding, block_o=block_o,
             interpret=interpret or jax.default_backend() != "tpu",
         )
     return conv_ref(x, w, stride=stride, padding=padding)
+
+
+def conv_mm(x, w, *, stride=1, padding=0, block_o=None, interpret=False):
+    if block_o is None:
+        shape = tiling.shape_key(x.shape, w.shape, stride=stride,
+                                 padding=padding, dtype=x.dtype)
+        block_o = tuned_config("conv_mm", shape,
+                               tiling.default(shape)).get("block_o")
+    return _conv_mm_jit(x, w, stride=stride, padding=padding,
+                        block_o=block_o, interpret=interpret)

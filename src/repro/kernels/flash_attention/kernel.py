@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.autotune import largest_dividing_block
+
 __all__ = ["flash_attention_kernel", "flash_attention"]
 
 NEG_INF = -1e30
@@ -80,9 +82,11 @@ def flash_attention_kernel(
     rep = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
 
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Sk)
-    assert Sq % block_q == 0 and Sk % block_k == 0
+    # Non-dividing blocks fall back to the largest dividing block ≤ the
+    # request (e.g. Sq=384, block_q=512 → 384) so arbitrary sequence
+    # lengths run instead of crashing on a divisibility assert.
+    block_q = largest_dividing_block(Sq, block_q)
+    block_k = largest_dividing_block(Sk, block_k)
 
     grid = (B, H, Sq // block_q)
     kernel = functools.partial(

@@ -3,6 +3,11 @@
 On TPU this dispatches to the Pallas kernel; elsewhere (CPU container) it
 runs the kernel in interpret mode (tests) or falls back to the blocked-XLA
 path used by the model code.
+
+``block_q=None`` / ``block_k=None`` consult the process autotuner
+(roofline-ranked, device-keyed cache — ``repro.kernels.autotune``) for
+this launch shape; explicit blocks always win.  Resolution happens
+outside the jit so tuned values participate in the static-arg cache key.
 """
 
 from __future__ import annotations
@@ -11,6 +16,9 @@ from functools import partial
 
 import jax
 
+from repro.kernels.autotune import tuned_config
+
+from . import tiling
 from .kernel import flash_attention_kernel
 from .ref import attention_ref
 
@@ -23,11 +31,24 @@ def _on_tpu() -> bool:
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "q_offset",
                                    "interpret"))
-def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
-                    q_offset=0, interpret=False):
+def _flash_attention_jit(q, k, v, *, causal, block_q, block_k, q_offset,
+                         interpret):
     if _on_tpu() or interpret:
         return flash_attention_kernel(
             q, k, v, causal=causal, block_q=block_q, block_k=block_k,
             q_offset=q_offset, interpret=interpret or not _on_tpu(),
         )
     return attention_ref(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=None, block_k=None,
+                    q_offset=0, interpret=False):
+    if block_q is None or block_k is None:
+        shape = tiling.shape_key(q.shape, k.shape, causal=causal,
+                                 dtype=q.dtype)
+        tuned = tuned_config("flash_attention", shape, tiling.default(shape))
+        block_q = block_q if block_q is not None else tuned.get("block_q", 512)
+        block_k = block_k if block_k is not None else tuned.get("block_k", 512)
+    return _flash_attention_jit(q, k, v, causal=causal, block_q=block_q,
+                                block_k=block_k, q_offset=q_offset,
+                                interpret=interpret)

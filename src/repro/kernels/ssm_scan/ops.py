@@ -1,4 +1,10 @@
-"""Jitted SSD op: Pallas intra-chunk kernel + JAX inter-chunk recurrence."""
+"""Jitted SSD op: Pallas intra-chunk kernel + JAX inter-chunk recurrence.
+
+``chunk=None`` consults the process autotuner (roofline-ranked,
+device-keyed cache — ``repro.kernels.autotune``); an explicit chunk
+always wins, snapped to the largest divisor of S ≤ the request so
+arbitrary sequence lengths run.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +13,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune import largest_dividing_block, tuned_config
+
+from . import tiling
 from .kernel import ssd_chunk_kernel
 from .ref import ssd_ref
 
@@ -14,12 +23,7 @@ __all__ = ["ssd"]
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(xh, a, Bm, Cm, *, chunk=128, initial_state=None, interpret=False):
-    """Full SSD: y (B,S,H,P) and final state (B,H,P,N).
-
-    Pallas path: intra-chunk kernel (parallel, MXU-heavy) + lax.scan over the
-    per-chunk states (sequential, tiny) + y_off correction.
-    """
+def _ssd_jit(xh, a, Bm, Cm, *, chunk, initial_state=None, interpret=False):
     if not (jax.default_backend() == "tpu" or interpret):
         return ssd_ref(xh, a, Bm, Cm, chunk=chunk, initial_state=initial_state)
 
@@ -49,3 +53,19 @@ def ssd(xh, a, Bm, Cm, *, chunk=128, initial_state=None, interpret=False):
                        Cc.astype(jnp.float32), prev, jnp.exp(cum))
     y = y_diag.astype(jnp.float32) + y_off.reshape(B, S, H, P)
     return y.astype(xh.dtype), final.transpose(0, 1, 3, 2)
+
+
+def ssd(xh, a, Bm, Cm, *, chunk=None, initial_state=None, interpret=False):
+    """Full SSD: y (B,S,H,P) and final state (B,H,P,N).
+
+    Pallas path: intra-chunk kernel (parallel, MXU-heavy) + lax.scan over the
+    per-chunk states (sequential, tiny) + y_off correction.
+    """
+    S = xh.shape[1]
+    if chunk is None:
+        shape = tiling.shape_key(xh.shape, Bm.shape[-1], dtype=xh.dtype)
+        chunk = tuned_config("ssm_scan", shape,
+                             tiling.default(shape)).get("chunk", 128)
+    chunk = largest_dividing_block(S, chunk)
+    return _ssd_jit(xh, a, Bm, Cm, chunk=chunk, initial_state=initial_state,
+                    interpret=interpret)

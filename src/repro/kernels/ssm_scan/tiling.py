@@ -1,0 +1,86 @@
+"""Tiling search space + static cost model for the SSD (Mamba-2) kernel.
+
+The chunk length is a genuine optimum, not a monotone knob: intra-chunk
+compute is quadratic in ``chunk`` (the (l, l) decay/score tiles), while
+the inter-chunk state traffic and sequential recurrence shrink as 1/chunk
+— state write-back is 4·B·H·N·P·(S/l) bytes and the ``lax.scan`` adds
+S/l dependent steps.  The roofline model balances the two per device.
+
+Grid = (B, n_chunks, H), h innermost: B/C blocks (index independent of h)
+are fetched once per (b, chunk); x/a per program.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.autotune import (
+    KernelCost,
+    TilingModel,
+    bytes_per_element,
+    largest_dividing_block,
+    register_tiling,
+)
+
+__all__ = ["shape_key", "candidates", "cost", "default"]
+
+_CHUNK_SEEDS = (16, 32, 64, 128, 256, 512)
+
+
+def shape_key(xh_shape, n_state: int, *, dtype) -> dict:
+    B, S, H, P = (int(d) for d in xh_shape)
+    return {"B": B, "S": S, "H": H, "P": P, "N": int(n_state),
+            "dtype": str(dtype)}
+
+
+def candidates(shape: dict) -> list[dict]:
+    S = shape["S"]
+    chunks = {largest_dividing_block(S, c) for c in _CHUNK_SEEDS} | {S}
+    return [{"chunk": c} for c in sorted(chunks)]
+
+
+def default(shape: dict) -> dict:
+    return {"chunk": largest_dividing_block(shape["S"], 128)}
+
+
+def cost(shape: dict, config: dict) -> KernelCost:
+    B, S, H, P, N = (shape[k] for k in ("B", "S", "H", "P", "N"))
+    l = largest_dividing_block(S, config.get("chunk"))
+    nc = S // l
+    bpe = bytes_per_element(shape["dtype"])
+
+    # intra-chunk matmuls (C·Bᵀ and (s∘L)·x are l×l) + state build/apply
+    flops = 2.0 * B * S * H * (l * (N + P) + 2.0 * N * P)
+    hbm = (bpe * (2.0 * B * S * H * P)        # x in, y_diag out
+           + 4.0 * 2 * B * S * H              # a in (f32 view), cum out
+           + bpe * 2.0 * B * S * N            # B/C once per (b, chunk)
+           + 4.0 * B * nc * H * (N * P + 1))  # states + chunk decay out
+    vmem = (bpe * (l * P + 2 * l * N)         # x, B/C blocks
+            + 4.0 * (2 * l * l               # L decay + score tiles (f32)
+                     + l * P                  # y accumulator
+                     + N * P + 2 * l))        # state tile, cum/decay vectors
+    return KernelCost(
+        flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
+        n_steps=B * nc * H + nc,              # grid programs + scan steps
+        mxu_min_dim=min(l, N, P),
+    )
+
+
+def _runner(shape: dict, config: dict):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from .ops import ssd
+
+    rng = np.random.default_rng(0)
+    B, S, H, P, N = (shape[k] for k in ("B", "S", "H", "P", "N"))
+    xh = jnp.asarray(rng.standard_normal((B, S, H, P)), shape["dtype"])
+    a = -jnp.abs(jnp.asarray(rng.standard_normal((B, S, H)),
+                             jnp.float32)) * 0.1
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), shape["dtype"])
+    ch = config["chunk"]
+    return lambda: ssd(xh, a, Bm, Bm, chunk=ch)[0]
+
+
+register_tiling(TilingModel(
+    name="ssm_scan", candidates=candidates, cost=cost, default=default,
+    runner=_runner,
+), overwrite=True)

@@ -85,6 +85,17 @@ def main() -> None:
                 info["device"] = device.name
             return ok, info
 
+    # Pre-tune kernel block sizes for this cell (abstract trace, no
+    # compile): the jitted step then reads every block size from the
+    # device-keyed tuning cache instead of the hand-picked constants.
+    from repro.models.transformer import warm_autotune
+
+    warm = warm_autotune(cfg, batch_size=args.batch, seq_len=args.seq,
+                         stages=("train",))
+    if warm["misses"]:
+        print(f"autotune: {warm['misses']} kernel configs tuned "
+              f"({warm['hits']} cached)")
+
     opt = OptimizerConfig(kind="adamw", lr=args.lr, warmup_steps=10,
                           total_steps=max(args.steps, 100))
     tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,

@@ -84,6 +84,38 @@ def _maybe_constrain(x, *spec_dims):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, _P(*dims)))
 
 
+def _tuned_attention_block_q(q, k, causal: bool) -> int:
+    """Query-block size for :func:`blocked_attention`, from the autotuner.
+
+    Shares the flash-attention tiling model (and its device-keyed cache)
+    with the Pallas kernel — the XLA fallback blocks over the same q axis,
+    so the same roofline/working-set trade-off picks its block.  Runs at
+    trace time (shapes are static); falls back to the historical 512.
+    """
+    from repro.kernels.autotune import tuned_config
+    from repro.kernels.flash_attention import tiling
+
+    B, Sq, Hkv, rep, Dh = q.shape  # (B, S, G, R, Dh) pre-blocking layout
+    shape = tiling.shape_key((B, Hkv * rep, Sq, Dh),
+                             (B, Hkv, k.shape[1], Dh),
+                             causal=causal, dtype=q.dtype)
+    return int(tuned_config("flash_attention", shape,
+                            tiling.default(shape)).get("block_q", 512))
+
+
+def _tuned_ssm_chunk(xh, n_state: int, default_chunk: int) -> int:
+    """Chunk length for :func:`ssd_scan`, from the autotuner (the
+    ``ssm_scan`` tiling model; trace-time only, falls back to the config
+    constant)."""
+    from repro.kernels.autotune import tuned_config
+    from repro.kernels.ssm_scan import tiling
+
+    shape = tiling.shape_key(xh.shape, n_state, dtype=xh.dtype)
+    return int(tuned_config("ssm_scan", shape,
+                            {"chunk": default_chunk}).get("chunk",
+                                                          default_chunk))
+
+
 def rms_norm(x, w, eps: float = 1e-6):
     dt = x.dtype
     x = x.astype(jnp.float32)
@@ -137,18 +169,21 @@ def blocked_attention(
     chunk: int = 8192,
     prefix: int = 0,
     kv_len=None,
-    block_q: int = 512,
+    block_q: int | None = None,
     scale: float | None = None,
 ):
     """GQA attention, scanned over query blocks (memory-bounded).
 
     q: (B, Sq, H, Dh);  k, v: (B, Sk, Hkv, Dh).  Returns (B, Sq, H, Dh).
+    ``block_q=None`` → autotuned (shared flash-attention tiling cache).
     """
     B, Sq, H, Dh = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     rep = H // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
     qr = (q * scale).reshape(B, Sq, Hkv, rep, Dh)
+    if block_q is None:
+        block_q = _tuned_attention_block_q(qr, k, mask_kind != "full")
 
     if Sq <= block_q:
         bias = _mask_bias(q_positions, k_positions, mask_kind, chunk, prefix, kv_len)
@@ -468,12 +503,14 @@ def ssd_block(x, p, cfg, *, cache=None):
     a = dt * A                                                 # (B,S,H) log-decay
     xh = xs * dt[..., None].astype(xs.dtype)
 
+    ssm_chunk = (_tuned_ssm_chunk(xh, N, cfg.ssm_chunk)
+                 if S > 1 else cfg.ssm_chunk)
     if cache is None:
-        y, final_state = ssd_scan(xh, a, Bm, Cm, cfg.ssm_chunk)
+        y, final_state = ssd_scan(xh, a, Bm, Cm, ssm_chunk)
         new_cache = None
     elif S > 1:  # prefill with cache: chunked scan seeded by cached state
         y, final_state = ssd_scan(
-            xh, a, Bm, Cm, cfg.ssm_chunk, initial_state=cache["state"]
+            xh, a, Bm, Cm, ssm_chunk, initial_state=cache["state"]
         )
         new_cache = {"conv": new_conv, "state": final_state}
     else:

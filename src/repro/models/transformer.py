@@ -49,6 +49,7 @@ __all__ = [
     "cache_specs",
     "init_cache",
     "input_specs",
+    "warm_autotune",
 ]
 
 DTYPE = jnp.bfloat16
@@ -462,6 +463,45 @@ def init_cache(cfg: ArchConfig, B: int, max_len: int, *, dtype=DTYPE,
     return jax.tree_util.tree_map_with_path(
         mk, cache_shapes(cfg, B, max_len), is_leaf=lambda x: isinstance(x, tuple)
     )
+
+
+def warm_autotune(cfg: ArchConfig, *, batch_size: int, seq_len: int,
+                  stages: tuple = ("train", "prefill", "decode")) -> dict:
+    """Pre-populate the kernel tuning cache for one workload cell.
+
+    Abstractly traces the requested entry points (``jax.eval_shape`` — no
+    compile, no allocation), which fires every trace-time autotune lookup
+    in ``models/layers.py`` with exactly the shapes the real jit will see
+    and persists the winners to the device-keyed
+    :class:`~repro.kernels.autotune.TuningCache`.  Launchers call this
+    once before building the jitted step so compilation never blocks on a
+    cold tuning search.  Returns the tuner's {hits, misses} delta.
+    """
+    from repro.kernels.autotune import autotune_enabled, get_tuner
+    from repro.configs.base import ShapeSpec
+
+    if not autotune_enabled():
+        return {"hits": 0, "misses": 0}
+    tuner = get_tuner()
+    h0, m0 = tuner.hits, tuner.misses
+    params = param_specs(cfg)
+    for stage in stages:
+        kind = stage if stage in ("train", "prefill", "decode") else "train"
+        spec = input_specs(
+            cfg, ShapeSpec("warm", seq_len, batch_size, kind),
+            include_params=False)
+        if kind == "decode":
+            jax.eval_shape(
+                lambda p, c, b: decode_step(p, c, b, cfg),
+                params, spec["cache"], spec["batch"])
+        elif kind == "prefill":
+            jax.eval_shape(
+                lambda p, b: prefill(p, b, cfg, max_len=seq_len),
+                params, spec["batch"])
+        else:
+            jax.eval_shape(
+                lambda p, b: loss_fn(p, b, cfg)[0], params, spec["batch"])
+    return {"hits": tuner.hits - h0, "misses": tuner.misses - m0}
 
 
 def input_specs(cfg: ArchConfig, shape, *, include_params: bool = True) -> dict:

@@ -124,11 +124,19 @@ class ServeEngine:
         logits = np.asarray(logits[:, -1].astype(jnp.float32))
         if self.scfg.temperature <= 0:
             return logits.argmax(-1).astype(np.int32)
-        p = np.exp(logits / self.scfg.temperature -
-                   (logits / self.scfg.temperature).max(-1, keepdims=True))
+        z = logits / self.scfg.temperature
+        z -= z.max(-1, keepdims=True)
+        p = np.exp(z)
         p /= p.sum(-1, keepdims=True)
-        return np.array([self._rng.choice(len(row), p=row) for row in p],
-                        dtype=np.int32)
+        # vectorized inverse-CDF over the whole batch: one uniform per row,
+        # first index whose running mass exceeds it (no per-row rng.choice).
+        # Force the last cumsum entry to 1: f32 accumulation can leave it
+        # fractionally below a u drawn near 1, and an all-False mask would
+        # silently argmax to token 0.
+        cdf = p.cumsum(-1)
+        cdf[:, -1] = 1.0
+        u = self._rng.random((p.shape[0], 1))
+        return (cdf > u).argmax(-1).astype(np.int32)
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32) -> dict:
         """prompts: (B, S0) int32 (B ≤ n_slots; right-aligned, no padding).
@@ -143,17 +151,21 @@ class ServeEngine:
         generated = [tok]
         finished = np.zeros(B, bool)
         steps = 0
+        # host-side mirror of cache_len: the loop bound must not force a
+        # device→host sync (int(cache_len)) on every decode step
+        host_len = S0 + getattr(self.cfg, "n_prefix", 0)
         for _ in range(max_new_tokens - 1):
             batch = {"tokens": jnp.asarray(tok[:, None]),
                      "cache_len": cache_len}
             logits, cache = self._decode(self.params, cache, batch)
             cache_len = cache_len + 1
+            host_len += 1
             steps += 1
             tok = self._sample(logits)
             tok = np.where(finished, self.scfg.eos_id, tok).astype(np.int32)
             finished |= tok == self.scfg.eos_id
             generated.append(tok)
-            if finished.all() or int(cache_len) >= self.scfg.max_len - 1:
+            if finished.all() or host_len >= self.scfg.max_len - 1:
                 break
         return {
             "tokens": np.stack(generated, axis=1),
