@@ -160,6 +160,84 @@ def calibration_accuracy(print_fn=print) -> dict:
             "gamma_mape_cal": after["gamma_mape"]}
 
 
+def campaign_accuracy(print_fn=print, *, ledger_path: str | None = None,
+                      subsample: int | None = None) -> dict:
+    """LM-forest accuracy rows: run (or resume) the host-CPU smoke campaign,
+    fit the forest, and compare held-out-cell MAPE against the uncalibrated
+    analytical path (which pays an AOT compile per cell for its answer —
+    the forest pays none).
+
+    The ledger persists across bench runs (``/tmp``), so after the first
+    nightly run this is resume + fit + a few analytical compiles.  Compiles
+    real reduced-config steps: seconds per cold cell — nightly-gate
+    territory, which is why ``run()`` doesn't call it."""
+    from repro.campaign import (
+        CampaignLedger,
+        CampaignRunner,
+        fit_lm_forest,
+        smoke_plan,
+    )
+    from repro.engine.types import STAGE_INFER, STAGE_TRAIN
+
+    ledger_path = ledger_path or "/tmp/perf4sight_campaign_smoke.jsonl"
+    plan = smoke_plan(subsample=subsample)
+    runner = CampaignRunner(plan, ledger_path, repeats=2, warmup=1)
+    summary = runner.run_campaign(print_fn=lambda *_: None)
+    print_fn(csv_line("campaign/cells_measured", summary["measured"],
+                      f"grid={len(plan)} quarantined={summary['failed']}"))
+
+    # Membership by cell KEY, not plan_hash: the persistent ledger may hold
+    # records from an earlier plan revision whose cells still overlap this
+    # one — those resumes are valid measurements of today's cells, while a
+    # plan_hash filter would orphan them forever (the runner never
+    # re-measures a recorded key).
+    plan_keys = {c.key for c in plan.cells}
+    records = [r for r in runner.ledger.records("ok")
+               if r.get("key") in plan_keys]
+    if len(records) < 6:
+        print_fn(csv_line("campaign/skipped", 1.0, "grid too sparse"))
+        return {}
+    forest = fit_lm_forest(records, holdout_frac=0.25, seed=0)
+    meta = forest.meta
+
+    # Held-out cells through BOTH paths.  Same split seed as the fit, so
+    # the forest has never seen these cells.
+    from repro.campaign.fit import split_records
+
+    _, heldout = split_records(records, holdout_frac=0.25, seed=0)
+    queries = [
+        CostQuery(arch=r["arch"], bs=r["shape"]["global_batch"],
+                  seq=r["shape"]["seq_len"],
+                  stage=STAGE_TRAIN if r["shape"]["kind"] == "train"
+                  else STAGE_INFER,
+                  reduced=True)
+        for r in heldout
+    ]
+    analytical = AnalyticalBackend(reduced=True, lm_device="host_cpu")
+    ests = analytical.estimate(queries)
+    phi_true = np.array([r["phi_ms"] for r in heldout])
+    gamma_true = np.array([r["gamma_mb"] for r in heldout])
+    from repro.core.predictor import mape
+
+    anal_phi = mape(np.array([e.phi_ms for e in ests]), phi_true)
+    anal_gamma = mape(np.array([e.gamma_mb for e in ests]), gamma_true)
+    out = {
+        "forest_phi_mape": meta["holdout_phi_mape"],
+        "forest_gamma_mape": meta["holdout_gamma_mape"],
+        "analytical_phi_mape": anal_phi,
+        "analytical_gamma_mape": anal_gamma,
+        "n_heldout": len(heldout),
+    }
+    print_fn(csv_line("campaign/phi_mape_forest", out["forest_phi_mape"],
+                      f"heldout={len(heldout)} zero-compile"))
+    print_fn(csv_line("campaign/phi_mape_analytical", anal_phi,
+                      "AOT compile per cell"))
+    print_fn(csv_line("campaign/gamma_mape_forest", out["forest_gamma_mape"],
+                      ""))
+    print_fn(csv_line("campaign/gamma_mape_analytical", anal_gamma, ""))
+    return out
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()

@@ -1,0 +1,57 @@
+"""Profiling-campaign subsystem (see docs/campaign.md).
+
+perf4sight's toolflow in one sentence: profile a configuration grid once
+on the target device, fit models, then answer every future cost question
+without touching the device.  This package is that loop for the LM
+workloads, over ``(ArchConfig × ShapeSpec × mesh × DeviceSpec)`` cells:
+
+* :mod:`repro.campaign.plan`        — reproducible grid enumeration
+  (``plan_grid``/``smoke_plan``, seeded stratified subsampling, plan hash)
+* :mod:`repro.campaign.runner`      — resumable, sharded execution into a
+  durable JSONL ledger with per-cell quarantine
+* :mod:`repro.campaign.lm_features` — compile-free featurization (device
+  constants are features: one forest serves a fleet)
+* :mod:`repro.campaign.fit`         — LM forests + NNLS ``parse_hlo_cost``
+  constants, registered with the engine's ``ForestBackend``
+
+CLI: ``python -m repro.campaign {plan,run,fit,status} ...``
+"""
+
+from repro.campaign.fit import (
+    LMForest,
+    fit_hlo_constants,
+    fit_lm_forest,
+    register_lm_forest,
+    split_records,
+)
+from repro.campaign.lm_features import LM_FEATURE_NAMES, cell_features
+from repro.campaign.plan import (
+    SMOKE_SHAPES,
+    CampaignCell,
+    CampaignPlan,
+    load_plan,
+    mesh_dims,
+    plan_grid,
+    smoke_plan,
+)
+from repro.campaign.runner import CampaignLedger, CampaignRunner, measure_cell
+
+__all__ = [
+    "CampaignCell",
+    "CampaignLedger",
+    "CampaignPlan",
+    "CampaignRunner",
+    "LMForest",
+    "LM_FEATURE_NAMES",
+    "SMOKE_SHAPES",
+    "cell_features",
+    "fit_hlo_constants",
+    "fit_lm_forest",
+    "load_plan",
+    "measure_cell",
+    "mesh_dims",
+    "plan_grid",
+    "register_lm_forest",
+    "smoke_plan",
+    "split_records",
+]

@@ -1,0 +1,167 @@
+"""Campaign CLI: plan → run (resumable, shardable) → fit → status.
+
+    # 1. plan a grid (reproducible: same args + seed → same plan hash)
+    PYTHONPATH=src python -m repro.campaign plan --smoke \
+        --out /tmp/camp/plan.json
+
+    # 2. run it — restartable; shard across workers with --shard/--num-shards
+    PYTHONPATH=src python -m repro.campaign run --plan /tmp/camp/plan.json \
+        --ledger /tmp/camp/ledger.jsonl
+
+    # 3. fit the LM forest (+ optionally the HLO device constants)
+    PYTHONPATH=src python -m repro.campaign fit --ledger /tmp/camp/ledger.jsonl \
+        --out /tmp/camp/lm_forest.npz --hlo-device-out /tmp/camp/device.json
+
+    # 4. where are we?
+    PYTHONPATH=src python -m repro.campaign status --plan /tmp/camp/plan.json \
+        --ledger /tmp/camp/ledger.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.campaign.fit import fit_hlo_constants, fit_lm_forest
+from repro.campaign.plan import (
+    SMOKE_SHAPES,
+    load_plan,
+    plan_grid,
+    smoke_plan,
+)
+from repro.campaign.runner import CampaignLedger, CampaignRunner
+from repro.configs.base import SHAPES
+
+
+def _cmd_plan(args) -> int:
+    if args.smoke:
+        plan = smoke_plan(subsample=args.subsample, seed=args.seed)
+    else:
+        plan = plan_grid(
+            archs=tuple(args.arch) or None,
+            shapes=tuple(args.shape) or None,
+            meshes=tuple(args.mesh),
+            device=args.device,
+            reduced=not args.full_scale,
+            subsample=args.subsample,
+            seed=args.seed,
+        )
+    plan.save(args.out)
+    print(f"plan {plan.plan_hash}: {len(plan)} cells "
+          f"({len(plan.skipped)} skipped unsupported) -> {args.out}")
+    return 0
+
+
+def _cmd_run(args) -> int:
+    plan = load_plan(args.plan)
+    runner = CampaignRunner(
+        plan, args.ledger, repeats=args.repeats, warmup=args.warmup,
+        run=not args.compile_only, retry_failed=args.retry_failed)
+    out = runner.run_campaign(args.shard, args.num_shards,
+                              max_cells=args.max_cells, print_fn=print)
+    print(json.dumps(out))
+    return 0 if out["remaining"] == 0 else 3  # 3 = come back for more
+
+
+def _cmd_fit(args) -> int:
+    ledger = CampaignLedger(args.ledger)
+    records = ledger.records()
+    forest = fit_lm_forest(records, device=args.device,
+                           holdout_frac=args.holdout, seed=args.seed)
+    forest.save(args.out)
+    print(f"LM forest -> {args.out}")
+    print(json.dumps({k: v for k, v in forest.meta.items()
+                      if k != "device_spec"}, indent=2, default=str))
+    if args.hlo_device_out:
+        from repro.engine.devices import save_device_spec
+
+        spec = fit_hlo_constants(records, base_device=args.device)
+        save_device_spec(args.hlo_device_out, spec)
+        print(f"calibrated LM DeviceSpec ({spec.name}, "
+              f"phi MAPE {spec.meta['phi_mape']:.3f}) -> {args.hlo_device_out}")
+    return 0
+
+
+def _cmd_status(args) -> int:
+    ledger = CampaignLedger(args.ledger)
+    out = {"ledger_records": len(ledger),
+           "ok": len(ledger.ok_keys),
+           "quarantined": sorted(
+               f"{r['arch']}×{r['shape']['name']}[{r['mesh']}]"
+               for r in ledger.records("failed"))}
+    if args.plan:
+        plan = load_plan(args.plan)
+        keys = {c.key for c in plan.cells}
+        out.update(
+            plan_hash=plan.plan_hash, plan_cells=len(plan),
+            pending=len(keys - ledger.ok_keys - ledger.failed_keys),
+            foreign_records=len(set(ledger._by_key) - keys),
+        )
+    print(json.dumps(out, indent=2))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.campaign")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("plan", help="enumerate + subsample a grid")
+    p.add_argument("--arch", action="append", default=[],
+                   help="arch id (repeatable; default: all)")
+    p.add_argument("--shape", action="append", default=[],
+                   help=f"shape name (repeatable; default: production SHAPES). "
+                        f"known: {sorted(SHAPES) + sorted(SMOKE_SHAPES)}")
+    p.add_argument("--mesh", action="append", default=["1x1"],
+                   help="mesh dims like 1x1 or 2x16x16 (repeatable)")
+    p.add_argument("--device", default="host_cpu")
+    p.add_argument("--full-scale", action="store_true",
+                   help="full (non-reduced) configs — production dry-run scale")
+    p.add_argument("--subsample", type=float, default=None,
+                   help="keep N cells (>=1) or a fraction (0..1), "
+                        "stratified by arch")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="the canonical host-CPU smoke grid (ignores "
+                        "--arch/--shape/--mesh)")
+    p.add_argument("--out", required=True)
+    p.set_defaults(fn=_cmd_plan)
+
+    p = sub.add_parser("run", help="measure pending cells (resumable)")
+    p.add_argument("--plan", required=True)
+    p.add_argument("--ledger", required=True)
+    p.add_argument("--shard", type=int, default=0)
+    p.add_argument("--num-shards", type=int, default=1)
+    p.add_argument("--max-cells", type=int, default=None)
+    p.add_argument("--repeats", type=int, default=2)
+    p.add_argument("--warmup", type=int, default=1)
+    p.add_argument("--compile-only", action="store_true",
+                   help="no execution: HLO/memory analysis only (phi_ms=0)")
+    p.add_argument("--retry-failed", action="store_true",
+                   help="re-measure quarantined cells too")
+    p.set_defaults(fn=_cmd_run)
+
+    p = sub.add_parser("fit", help="fit LM forest (+ HLO constants)")
+    p.add_argument("--ledger", required=True)
+    p.add_argument("--out", required=True, help=".npz (packed) or .json")
+    p.add_argument("--device", default=None,
+                   help="featurize under this device (default: per-record)")
+    p.add_argument("--holdout", type=float, default=0.25)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--hlo-device-out", default=None,
+                   help="also NNLS-fit parse_hlo_cost constants into a "
+                        "calibrated DeviceSpec at this path")
+    p.set_defaults(fn=_cmd_fit)
+
+    p = sub.add_parser("status", help="ledger/plan progress")
+    p.add_argument("--ledger", required=True)
+    p.add_argument("--plan", default=None)
+    p.set_defaults(fn=_cmd_status)
+
+    args = ap.parse_args(argv)
+    if args.cmd == "plan" and args.subsample is not None and args.subsample >= 1:
+        args.subsample = int(args.subsample)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,318 @@
+"""Fit campaign ledgers into serveable artifacts.
+
+Two fits come out of one ledger:
+
+* :func:`fit_lm_forest` — an :class:`LMForest` (one hybrid ridge+forest per
+  attribute, the same ``core/forest`` machinery as the CNN predictor) over
+  the compile-free ``lm_features`` rows.  Registered with
+  :class:`~repro.engine.backends.ForestBackend`, it answers LM-cell
+  ``CostQuery``s in microseconds with **zero jax compiles** — the paper's
+  "fit once, predict forever" loop closed for the LM workloads.
+* :func:`fit_hlo_constants` — NNLS of the ``parse_hlo_cost`` roofline terms
+  (the ROADMAP's "calibrate the LM/HLO path" item): solves for effective
+  peak FLOP/s, HBM bandwidth, ICI bandwidth and launch overhead from the
+  same ledger, returning a ``calibrated=True`` DeviceSpec for the
+  analytical backend's LM path.
+
+Both artifacts persist atomically (``core/fileio``) — NPZ for the packed
+forest arrays, JSON for metadata/constants — and carry the plan hash +
+device fingerprint they were fitted from.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import replace
+
+import numpy as np
+
+from repro.campaign.lm_features import (
+    LM_FEATURE_NAMES,
+    cell_features,
+    feature_matrix,
+    query_cell,
+)
+from repro.campaign.plan import mesh_dims
+from repro.core.fileio import atomic_write_bytes, atomic_write_json
+from repro.core.predictor import HybridRegressor, mape
+from repro.engine.calibrate import nnls
+from repro.engine.decompose import lm_roofline_terms
+from repro.engine.devices import DeviceSpec, resolve_device
+
+__all__ = [
+    "LMForest",
+    "split_records",
+    "fit_lm_forest",
+    "fit_hlo_constants",
+    "register_lm_forest",
+]
+
+
+class LMForest:
+    """Campaign-fitted (Γ, Φ) predictor for LM cells.
+
+    Prediction is numpy-only: features come from ``lm_features`` (no jax,
+    no lowering), the regressors are the repo's own ridge+forest hybrids.
+    ``meta`` records provenance (plan hash, device, mesh, holdout MAPEs);
+    ``default_device``/``default_mesh`` fill in the coordinates a bare
+    ``CostQuery`` doesn't carry."""
+
+    def __init__(self, *, n_estimators: int = 60, min_samples_leaf: int = 1,
+                 seed: int = 0):
+        kw = dict(n_estimators=n_estimators,
+                  min_samples_leaf=min_samples_leaf, max_features="third")
+        self.gamma_model = HybridRegressor(seed=seed, **kw)
+        self.phi_model = HybridRegressor(seed=seed + 1, **kw)
+        self.meta: dict = {}
+        self.fitted = False
+
+    # -- coordinates -------------------------------------------------------
+
+    @property
+    def default_device(self) -> DeviceSpec:
+        d = self.meta.get("device_spec")
+        return DeviceSpec.from_dict(d) if d else resolve_device(
+            self.meta.get("device", "host_cpu"))
+
+    @property
+    def default_mesh(self) -> tuple[int, ...]:
+        return tuple(self.meta.get("mesh_dims", (1, 1)))
+
+    # -- prediction --------------------------------------------------------
+
+    def predict_features(self, X: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        X = np.atleast_2d(np.asarray(X, dtype=np.float64))
+        return self.gamma_model.predict(X), self.phi_model.predict(X)
+
+    def predict_queries(self, queries, *, device: DeviceSpec | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched (Γ MB, Φ ms) for engine ``CostQuery``s — one feature
+        build + one packed traversal per attribute, zero compiles."""
+        dev = device or self.default_device
+        mesh = self.default_mesh
+        reduced_default = bool(self.meta.get("reduced", True))
+        X = np.stack([
+            cell_features(*query_cell(q, reduced_default=reduced_default),
+                          mesh, dev)
+            for q in queries
+        ])
+        return self.predict_features(X)
+
+    # -- identity / persistence -------------------------------------------
+
+    def content_hash(self) -> str:
+        h = hashlib.sha1()
+        h.update(self.gamma_model.content_hash().encode())
+        h.update(self.phi_model.content_hash().encode())
+        h.update(json.dumps(self.meta.get("device_spec", {}),
+                            sort_keys=True, default=str).encode())
+        return h.hexdigest()
+
+    def save(self, path: str) -> None:
+        """Atomic persist; ``.npz`` packs the forest arrays (compact),
+        ``.json`` keeps the nested dicts (inspectable).  Metadata rides in
+        both."""
+        if path.endswith(".npz"):
+            arrays: dict[str, np.ndarray] = {}
+            for prefix, model in (("gamma_", self.gamma_model),
+                                  ("phi_", self.phi_model)):
+                arrays.update(model.to_arrays(prefix))
+            meta = json.dumps({"meta": self.meta,
+                               "feature_names": list(LM_FEATURE_NAMES)})
+            arrays["campaign_meta"] = np.frombuffer(meta.encode(), dtype=np.uint8)
+            atomic_write_bytes(path, lambda f: np.savez_compressed(f, **arrays),
+                               suffix=".npz")
+            return
+        atomic_write_json(path, {
+            "meta": self.meta, "feature_names": list(LM_FEATURE_NAMES),
+            "gamma": self.gamma_model.to_dict(),
+            "phi": self.phi_model.to_dict(),
+        })
+
+    @classmethod
+    def load(cls, path: str) -> "LMForest":
+        self = cls()
+        if path.endswith(".npz"):
+            with np.load(path) as arrays:
+                header = json.loads(
+                    bytes(arrays["campaign_meta"].tobytes()).decode())
+                self.gamma_model = HybridRegressor.from_arrays(arrays, "gamma_")
+                self.phi_model = HybridRegressor.from_arrays(arrays, "phi_")
+        else:
+            with open(path) as f:
+                blob = json.load(f)
+            header = blob
+            self.gamma_model = HybridRegressor.from_dict(blob["gamma"])
+            self.phi_model = HybridRegressor.from_dict(blob["phi"])
+        names = header.get("feature_names", [])
+        if names and list(names) != list(LM_FEATURE_NAMES):
+            raise ValueError(
+                f"{path} was fitted on a different feature set "
+                f"({len(names)} features vs {len(LM_FEATURE_NAMES)}); refit "
+                "the campaign with `python -m repro.campaign fit`")
+        self.meta = header.get("meta", {})
+        self.fitted = True
+        return self
+
+
+def _ok_records(records) -> list[dict]:
+    recs = [r for r in records if r.get("status") == "ok"]
+    if not recs:
+        raise ValueError("no status:'ok' records in the ledger — run the "
+                         "campaign first (python -m repro.campaign run)")
+    return recs
+
+
+def split_records(records, *, holdout_frac: float = 0.25, seed: int = 0
+                  ) -> tuple[list[dict], list[dict]]:
+    """Deterministic train/holdout split of ok-records, stratified nowhere —
+    cells are i.i.d. grid points; the seed makes the held-out MAPE a stable
+    regression metric."""
+    recs = _ok_records(records)
+    n_hold = int(round(holdout_frac * len(recs)))
+    if len(recs) >= 4:
+        n_hold = max(n_hold, 1)
+    n_hold = min(n_hold, len(recs) - 2) if len(recs) > 2 else 0
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(recs))
+    hold = {int(i) for i in idx[:n_hold]}
+    train = [r for i, r in enumerate(recs) if i not in hold]
+    heldout = [r for i, r in enumerate(recs) if i in hold]
+    return train, heldout
+
+
+def fit_lm_forest(
+    records: list[dict],
+    *,
+    device: "DeviceSpec | str | None" = None,
+    holdout_frac: float = 0.25,
+    seed: int = 0,
+    n_estimators: int = 60,
+) -> LMForest:
+    """Grow the (Γ, Φ) forests from ledger records.
+
+    The model is fitted on the train split only; the held-out MAPEs in
+    ``meta`` are therefore honest generalization numbers (the acceptance
+    gate ``benchmarks/check_thresholds.py`` compares them against the
+    uncalibrated analytical path).
+
+    ``device=None`` (the default) featurizes each record under its OWN
+    recorded device — the fleet case: a multi-device campaign keeps every
+    row's constants truthful, and the forest learns the device dimension.
+    Pass a device only to deliberately re-featurize one campaign under
+    another spec (e.g. a freshly calibrated one)."""
+    train, heldout = split_records(records, holdout_frac=holdout_frac,
+                                   seed=seed)
+    # Query-time default coordinates: the explicit override, else the
+    # (single) campaign device; a mixed-device ledger keeps per-row truth
+    # in the features and the first device only as the query default.
+    dev = resolve_device(device if device is not None
+                         else train[0].get("device", "host_cpu"))
+
+    def targets(recs):
+        return (np.array([r["gamma_mb"] for r in recs], dtype=np.float64),
+                np.array([r["phi_ms"] for r in recs], dtype=np.float64))
+
+    X = feature_matrix(train, device=device)
+    g, p = targets(train)
+    forest = LMForest(n_estimators=n_estimators, seed=seed)
+    forest.gamma_model.fit(X, g)
+    forest.phi_model.fit(X, p)
+    forest.fitted = True
+
+    meta = {
+        "n_train": len(train), "n_heldout": len(heldout),
+        "plan_hash": train[0].get("plan_hash"),
+        "devices": sorted({r.get("device", "host_cpu") for r in train}),
+        "device": dev.name, "device_spec": dev.to_dict(),
+        "device_fingerprint": dev.fingerprint(),
+        "mesh_dims": list(mesh_dims(train[0].get("mesh", "1x1"))),
+        "reduced": bool(train[0].get("reduced", True)),
+        "oob_gamma_mape": forest.gamma_model.oob_mape_,
+        "oob_phi_mape": forest.phi_model.oob_mape_,
+    }
+    if heldout:
+        Xh = feature_matrix(heldout, device=device)
+        gh, ph = targets(heldout)
+        pg, pp = forest.predict_features(Xh)
+        meta["holdout_gamma_mape"] = mape(pg, gh)
+        meta["holdout_phi_mape"] = mape(pp, ph)
+    forest.meta = meta
+    return forest
+
+
+def fit_hlo_constants(
+    records: list[dict],
+    *,
+    base_device: "DeviceSpec | str | None" = None,
+    name: str | None = None,
+) -> DeviceSpec:
+    """NNLS-fit the ``parse_hlo_cost`` roofline constants from the ledger.
+
+    Solves  phi_s = c0 + c1·flops + c2·hbm_bytes + c3·collective_bytes
+    with c ≥ 0 over the executed cells, then inverts the coefficients into
+    the DeviceSpec denominators (``lm_roofline_terms`` divides by exactly
+    these) — the same Lawson–Hanson machinery as the CNN calibration
+    (``engine/calibrate.nnls``), applied to the LM/HLO decomposition."""
+    recs = [r for r in _ok_records(records) if r.get("phi_ms", 0) > 0]
+    if len(recs) < 4:
+        raise ValueError(f"need >= 4 executed cells to fit 4 constants, "
+                         f"have {len(recs)}")
+    base = resolve_device(base_device if base_device is not None
+                          else recs[0].get("device", "host_cpu"))
+    flops = np.array([r["flops"] for r in recs], dtype=np.float64)
+    hbm = np.array([r["hbm_bytes"] for r in recs], dtype=np.float64)
+    coll = np.array([r["collective_bytes"] for r in recs], dtype=np.float64)
+    phi_s = np.array([r["phi_ms"] for r in recs], dtype=np.float64) / 1e3
+
+    A = np.stack([np.ones_like(phi_s), flops, hbm, coll], axis=1)
+    c = nnls(A, phi_s)
+    # Inert (never-binding) terms keep a finite, serializable denominator.
+    spec = replace(
+        base,
+        name=name or f"{base.name}_lm_calibrated",
+        peak_flops=1.0 / c[1] if c[1] > 0 else 1e18,
+        hbm_bw=1.0 / c[2] if c[2] > 0 else 1e18,
+        ici_bw=1.0 / c[3] if c[3] > 0 else 1e18,
+        launch_overhead_s=float(c[0]),
+        combine="sum",
+        calibrated=True,
+        meta={
+            "base_device": base.name,
+            "n_cells": len(recs),
+            "plan_hash": recs[0].get("plan_hash"),
+            "phi_mape": float(mape(A @ c, phi_s)),
+            "fit": "campaign_hlo_nnls",
+        },
+    )
+    # Self-check through the shared terms: predictions must reproduce A @ c.
+    t = lm_roofline_terms(flops, hbm, coll, spec)
+    assert np.allclose(spec.launch_overhead_s + sum(t), A @ c, rtol=1e-6)
+    return spec
+
+
+def register_lm_forest(target, forest: LMForest):
+    """Attach a fitted forest to the engine's prediction path.
+
+    ``target`` may be a :class:`~repro.engine.engine.CostEngine`, an
+    :class:`~repro.engine.backends.EnsembleBackend`, or a
+    :class:`~repro.engine.backends.ForestBackend`; the first ForestBackend
+    found gets ``forest`` as its LM model (its ``cache_salt`` changes with
+    it, so stale on-disk estimates can't be served).  Returns the backend
+    that now owns the forest."""
+    from repro.engine.backends import EnsembleBackend, ForestBackend
+    from repro.engine.engine import CostEngine
+
+    if isinstance(target, CostEngine):
+        return register_lm_forest(target.backend, forest)
+    if isinstance(target, EnsembleBackend):
+        for b in target.backends:
+            if isinstance(b, ForestBackend):
+                return register_lm_forest(b, forest)
+        raise ValueError("no ForestBackend in the ensemble chain to attach "
+                         "the LM forest to")
+    if isinstance(target, ForestBackend):
+        target.lm = forest
+        return target
+    raise TypeError(f"cannot register an LM forest on {type(target).__name__}")

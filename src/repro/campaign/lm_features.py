@@ -1,0 +1,159 @@
+"""Compile-free featurization of LM campaign cells.
+
+perf4sight's CNN path featurizes a topology analytically (App. B) and lets
+the forest learn the device/framework nonlinearity.  This module is the LM
+analogue: every feature is a pure function of
+``(ArchConfig × ShapeSpec × mesh × DeviceSpec)`` — architecture widths and
+counts, workload token geometry, mesh split, and *device-scaled roofline
+terms* built from the same :func:`repro.engine.decompose.lm_roofline_terms`
+denominators the analytical backend and the constant fit divide by.
+
+Because the calibrated device constants enter as features (and scale the
+roofline terms), one forest fitted over a multi-device campaign serves the
+whole fleet: a query for a new device re-featurizes with that device's
+constants instead of needing its own forest.
+
+Nothing here touches jax — a fitted forest answers admission queries with
+zero compiles, which is the entire point of the campaign.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeSpec, mesh_split
+from repro.configs.registry import get_config
+from repro.core.roofline import model_flops_for_cell
+from repro.engine.decompose import lm_roofline_terms
+from repro.engine.devices import DeviceSpec, resolve_device
+
+__all__ = [
+    "LM_FEATURE_NAMES",
+    "cell_features",
+    "feature_matrix",
+    "query_cell",
+]
+
+_BYTES_PER_EL = {"bfloat16": 2, "float16": 2, "float32": 4}
+
+LM_FEATURE_NAMES: tuple[str, ...] = (
+    # --- architecture ---
+    "n_layers", "d_model", "n_heads", "n_kv_heads", "head_dim", "d_ff",
+    "padded_vocab", "n_experts", "experts_per_token", "moe_d_ff",
+    "ssm_state", "n_encoder_layers", "hybrid_period",
+    "params_total", "params_active",
+    "is_moe", "is_ssm", "is_hybrid", "is_encdec",
+    # --- workload shape ---
+    "seq_len", "global_batch", "tokens",
+    "kind_train", "kind_prefill", "kind_decode",
+    # --- mesh ---
+    "n_devices", "n_data", "n_model",
+    # --- analytic per-device compute/byte decomposition ---
+    "model_flops_dev", "param_bytes_dev", "act_bytes_dev", "kv_bytes_dev",
+    "opt_bytes_dev", "coll_bytes_dev", "arithmetic_intensity",
+    # --- device-scaled roofline terms (decompose.lm_roofline_terms) ---
+    "compute_s", "memory_s", "collective_s", "roofline_ms",
+    # --- raw device constants (fleet transfer) ---
+    "log_peak_flops", "log_hbm_bw", "log_ici_bw", "launch_overhead_ms",
+    "device_calibrated",
+)
+
+
+def cell_features(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh_dims: tuple[int, ...],
+    device: DeviceSpec,
+) -> np.ndarray:
+    """One feature row (``LM_FEATURE_NAMES`` order) — numpy only, no jax."""
+    n_dev, n_data, n_model = mesh_split(tuple(mesh_dims))
+    bpe = _BYTES_PER_EL.get(cfg.dtype, 2)
+    V = cfg.padded_vocab()
+    params = cfg.param_count()
+    active = cfg.param_count(active_only=True)
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+
+    # Per-device analytic decomposition.  These are deliberately coarse —
+    # the forest corrects them from profiled ground truth; their job is to
+    # carry the right *scaling* (linear in tokens, 1/n_dev in splits).
+    model_flops_dev = model_flops_for_cell(cfg, shape) / n_dev
+    param_bytes_dev = bpe * params / max(n_model, 1)
+    act_bytes_dev = bpe * (tokens / max(n_data, 1)) * cfg.d_model \
+        * max(cfg.n_layers, 1)
+    kv_bytes_dev = 0.0
+    if shape.kind != "train":
+        kv_len = shape.seq_len + cfg.n_prefix
+        kv_bytes_dev = (
+            2.0 * bpe * (shape.global_batch / max(n_data, 1)) * kv_len
+            * max(cfg.n_kv_heads, 1) * cfg.head_dim_ * max(cfg.n_layers, 1)
+            / max(n_model, 1))
+    opt_bytes_dev = 0.0
+    if shape.kind == "train":
+        # grads (model dtype) + adamw m/v slots (f32) per device
+        opt_bytes_dev = (bpe + 2 * 4) * params / max(n_model, 1)
+    # ring-model gradient/activation exchange: zero on a single device
+    coll_bytes_dev = (
+        2.0 * bpe * params / n_dev * (n_dev - 1) / n_dev if n_dev > 1 else 0.0)
+
+    bytes_moved = param_bytes_dev + act_bytes_dev + kv_bytes_dev + opt_bytes_dev
+    compute_s, memory_s, coll_s = (
+        float(v) for v in lm_roofline_terms(
+            model_flops_dev, bytes_moved, coll_bytes_dev, device))
+    roofline_ms = device.combine_terms(compute_s, memory_s, coll_s) * 1e3
+
+    vals = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_,
+        cfg.d_ff, V, cfg.n_experts, cfg.experts_per_token, cfg.moe_d_ff_,
+        cfg.ssm_state, cfg.n_encoder_layers, cfg.hybrid_period,
+        params, active,
+        float(cfg.is_moe), float(cfg.family == "ssm"),
+        float(cfg.hybrid_period > 0), float(cfg.n_encoder_layers > 0),
+        shape.seq_len, shape.global_batch, tokens,
+        float(shape.kind == "train"), float(shape.kind == "prefill"),
+        float(shape.kind == "decode"),
+        n_dev, n_data, n_model,
+        model_flops_dev, param_bytes_dev, act_bytes_dev, kv_bytes_dev,
+        opt_bytes_dev, coll_bytes_dev,
+        model_flops_dev / max(bytes_moved, 1.0),
+        compute_s, memory_s, coll_s, roofline_ms,
+        math.log10(device.peak_flops), math.log10(device.hbm_bw),
+        math.log10(device.ici_bw), device.launch_overhead_s * 1e3,
+        float(device.calibrated),
+    )
+    x = np.asarray(vals, dtype=np.float64)
+    assert x.shape == (len(LM_FEATURE_NAMES),)
+    return x
+
+
+def query_cell(query, *, reduced_default: bool = True):
+    """(cfg, shape) a :class:`~repro.engine.types.CostQuery` LM-cell query
+    describes — the bridge from the engine's query language to campaign
+    coordinates.  ``stage`` maps train→train and infer→prefill (admission
+    asks about whole forward passes, not single decode steps)."""
+    if query.arch is None:
+        raise ValueError("not an LM-cell query (no arch id)")
+    reduced = reduced_default if query.reduced is None else query.reduced
+    cfg = get_config(query.arch, reduced=reduced)
+    kind = "train" if query.stage == "train" else "prefill"
+    return cfg, ShapeSpec("query", query.seq, query.bs, kind)
+
+
+def feature_matrix(
+    records: list[dict],
+    *,
+    device: "DeviceSpec | str | None" = None,
+) -> np.ndarray:
+    """(N, F) matrix from campaign ledger records (see ``runner.py`` for the
+    schema).  ``device`` overrides the per-record device name — used to
+    re-featurize one campaign under another device's constants."""
+    from repro.campaign.plan import CampaignCell, mesh_dims
+
+    rows = []
+    for rec in records:
+        cell = CampaignCell.from_dict(rec)
+        cfg = get_config(cell.arch, reduced=cell.reduced)
+        dev = resolve_device(device if device is not None else cell.device)
+        rows.append(cell_features(cfg, cell.shape, mesh_dims(cell.mesh), dev))
+    return np.stack(rows) if rows else np.zeros((0, len(LM_FEATURE_NAMES)))

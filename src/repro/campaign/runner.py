@@ -1,0 +1,260 @@
+"""Resumable campaign execution over a durable JSONL ledger.
+
+The runner is deliberately dumb-robust, in the way a long profiling
+campaign on a flaky edge fleet has to be (paper §5.1.1's "profile once,
+reuse forever" only works if "once" survives interruption):
+
+* **Durable append-only ledger** — every measured cell is appended through
+  ``core/fileio.append_jsonl`` (O_APPEND + fsync) the moment it finishes.
+  A killed runner loses at most the cell in flight; a torn final line is
+  dropped by the tolerant loader and simply re-measured.
+* **Resume** — on start the runner loads the ledger and skips every cell
+  already recorded (``ok`` *or* quarantined), so a restart continues where
+  the previous run died instead of recompiling the grid.
+* **Quarantine, don't abort** — a cell whose lowering/measurement raises is
+  recorded as ``status:"failed"`` with the error and the campaign moves
+  on.  Failed cells are NOT retried on restart (the failure is almost
+  always deterministic — an unlowerable layout); ``retry_failed=True``
+  opts back in after a fix.
+* **Sharding** — ``shard_index/num_shards`` split cells by a stable hash
+  of the cell key, so N workers given the same plan partition the grid
+  without coordination and may share one ledger file (appends from
+  different processes never interleave).
+
+The default measurement compiles the real step through
+``launch/lowering.compile_cell`` (the dry-run machinery), records the
+memory plan + trip-count-aware HLO cost parse, and — ProfilerBackend
+style — times real executions of the compiled step.
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.campaign.plan import CampaignCell, CampaignPlan, mesh_dims
+from repro.core.fileio import append_jsonl, load_jsonl_tolerant
+
+__all__ = ["CampaignLedger", "CampaignRunner", "measure_cell"]
+
+LEDGER_SCHEMA_VERSION = 1
+
+
+class CampaignLedger:
+    """Read/append view of a campaign's JSONL ledger.
+
+    One record per measured cell attempt; the *last* record per cell key
+    wins (a ``--retry-failed`` re-measurement supersedes the quarantined
+    one).  See docs/campaign.md for the record schema."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._by_key: dict[str, dict] = {}
+        for rec in load_jsonl_tolerant(path):
+            key = rec.get("key")
+            if key:
+                self._by_key[key] = rec
+
+    # -- queries -----------------------------------------------------------
+
+    def get(self, key: str) -> dict | None:
+        return self._by_key.get(key)
+
+    def records(self, status: str | None = None) -> list[dict]:
+        recs = list(self._by_key.values())
+        return recs if status is None else [
+            r for r in recs if r.get("status") == status]
+
+    @property
+    def ok_keys(self) -> set[str]:
+        return {k for k, r in self._by_key.items() if r.get("status") == "ok"}
+
+    @property
+    def failed_keys(self) -> set[str]:
+        """The quarantine list — persisted in the ledger itself."""
+        return {k for k, r in self._by_key.items()
+                if r.get("status") == "failed"}
+
+    # -- writes ------------------------------------------------------------
+
+    def append(self, record: dict) -> None:
+        append_jsonl(self.path, record)
+        self._by_key[record["key"]] = record
+
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+
+def _materialize(spec_tree):
+    """Zero-filled numpy inputs for a ShapeDtypeStruct tree (timing only
+    exercises the compute graph; values are irrelevant)."""
+    import jax
+
+    return jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), spec_tree)
+
+
+def measure_cell(
+    cell: CampaignCell,
+    *,
+    repeats: int = 2,
+    warmup: int = 1,
+    run: bool = True,
+) -> dict:
+    """Ground truth for one cell: compile (via the shared dry-run lowering),
+    read the memory plan + HLO cost parse, and time real executions.
+
+    ``run=False`` skips execution (compile-only campaign — e.g. planning
+    meshes far larger than the host): ``phi_ms`` is then 0 and the fit
+    must use the HLO terms only."""
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.core.hlo_cost import parse_hlo_cost
+    from repro.core.profiler import memory_analysis_bytes
+    from repro.launch.lowering import compile_cell
+    from repro.launch.mesh import make_mesh
+
+    cfg = get_config(cell.arch, reduced=cell.reduced)
+    dims = mesh_dims(cell.mesh)
+    axes = ("pod", "data", "model")[-len(dims):]
+    mesh = make_mesh(dims, axes)
+
+    # donate=False: timing calls the executable repeatedly with the same
+    # buffers — donation would invalidate them after the first call.
+    compiled, arg_specs, compile_s = compile_cell(
+        cfg, cell.shape, mesh, donate=not run)
+
+    mb = memory_analysis_bytes(compiled)
+    cost = parse_hlo_cost(compiled.as_text())
+
+    phi_ms = 0.0
+    if run:
+        args = tuple(_materialize(s) for s in arg_specs)
+        with mesh:
+            out = compiled(*args)
+            jax.block_until_ready(out)  # warm transfer + dispatch path
+            for _ in range(max(warmup - 1, 0)):
+                jax.block_until_ready(compiled(*args))
+            times = []
+            for _ in range(max(repeats, 1)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(compiled(*args))
+                times.append(time.perf_counter() - t0)
+        phi_ms = float(np.median(times)) * 1e3
+
+    return {
+        "gamma_mb": (mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6,
+        "phi_ms": phi_ms,
+        "compile_s": compile_s,
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "collective_bytes": cost.collective_bytes,
+        "temp_mb": mb["temp"] / 1e6,
+        "arg_mb": mb["arg"] / 1e6,
+        "n_devices": int(mesh.devices.size),
+        "executed": bool(run),
+    }
+
+
+@dataclass
+class CampaignRunner:
+    """Drive a plan's cells through ``measure`` into the ledger.
+
+    ``measure`` is injectable (tests use a deterministic fake; a TPU
+    campaign could wrap ``measure_cell`` with device pinning); it takes a
+    :class:`CampaignCell` and returns the measurement dict merged into the
+    ledger record."""
+
+    plan: CampaignPlan
+    ledger: "CampaignLedger | str"
+    measure: "callable" = None
+    repeats: int = 2
+    warmup: int = 1
+    run: bool = True
+    retry_failed: bool = False
+    extra_meta: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if isinstance(self.ledger, str):
+            self.ledger = CampaignLedger(self.ledger)
+        if self.measure is None:
+            self.measure = lambda cell: measure_cell(
+                cell, repeats=self.repeats, warmup=self.warmup, run=self.run)
+
+    # -- work selection ----------------------------------------------------
+
+    def shard_cells(self, shard_index: int = 0, num_shards: int = 1) -> list[CampaignCell]:
+        """Deterministic partition by cell-key hash: independent of ledger
+        state, so workers never race for (or orphan) a cell."""
+        if not (0 <= shard_index < num_shards):
+            raise ValueError(f"shard {shard_index} outside 0..{num_shards - 1}")
+        return [c for c in self.plan.cells
+                if int(c.key[:8], 16) % num_shards == shard_index]
+
+    def pending(self, shard_index: int = 0, num_shards: int = 1) -> list[CampaignCell]:
+        done = self.ledger.ok_keys
+        if not self.retry_failed:
+            done = done | self.ledger.failed_keys
+        return [c for c in self.shard_cells(shard_index, num_shards)
+                if c.key not in done]
+
+    # -- the loop ----------------------------------------------------------
+
+    def run_campaign(
+        self,
+        shard_index: int = 0,
+        num_shards: int = 1,
+        *,
+        max_cells: int | None = None,
+        print_fn=None,
+    ) -> dict:
+        """Measure every pending cell of this shard; returns a summary.
+
+        ``max_cells`` bounds the number of *measurements this call* makes
+        (not the grid) — used by tests to simulate a mid-grid kill and by
+        budgeted overnight runs."""
+        say = print_fn or (lambda *_: None)
+        shard = self.shard_cells(shard_index, num_shards)
+        pending = self.pending(shard_index, num_shards)
+        say(f"campaign {self.plan.plan_hash}: shard {shard_index + 1}/"
+            f"{num_shards} has {len(shard)} cells, {len(pending)} pending, "
+            f"{len(self.ledger.failed_keys)} quarantined")
+        measured = failed = 0
+        for cell in pending:
+            if max_cells is not None and measured + failed >= max_cells:
+                break
+            base = {
+                **cell.to_dict(),
+                "key": cell.key,
+                "plan_hash": self.plan.plan_hash,
+                "schema": LEDGER_SCHEMA_VERSION,
+                **self.extra_meta,
+            }
+            try:
+                result = self.measure(cell)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:
+                failed += 1
+                say(f"QUARANTINE {cell.arch} × {cell.shape.name} "
+                    f"[{cell.mesh}]: {e}")
+                self.ledger.append({
+                    **base, "status": "failed", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc(limit=5),
+                })
+                continue
+            measured += 1
+            self.ledger.append({**base, "status": "ok", **result})
+            say(f"ok {cell.arch} × {cell.shape.name} [{cell.mesh}]: "
+                f"gamma={result['gamma_mb']:.1f}MB phi={result['phi_ms']:.2f}ms"
+                f" (compile {result.get('compile_s', 0):.1f}s)")
+        return {
+            "shard_cells": len(shard),
+            "measured": measured,
+            "failed": failed,
+            "remaining": len(self.pending(shard_index, num_shards)),
+            "ledger_records": len(self.ledger),
+        }

@@ -13,11 +13,26 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field, replace
 
-__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "TRAIN_SHAPES", "DECODE_SHAPES"]
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "TRAIN_SHAPES", "DECODE_SHAPES",
+           "mesh_split"]
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def mesh_split(mesh_dims: tuple[int, ...]) -> tuple[int, int, int]:
+    """(n_devices, n_data, n_model) of a mesh-dims tuple.
+
+    THE single statement of the mesh convention: the model axis is last,
+    everything before it (pod, data) is data parallelism.  Registry cell
+    filtering, campaign featurization and the dry-run axis naming all
+    assume this order — change it here or nowhere."""
+    n_model = mesh_dims[-1]
+    n_data = 1
+    for d in mesh_dims[:-1]:
+        n_data *= d
+    return n_data * n_model, n_data, n_model
 
 
 @dataclass(frozen=True)

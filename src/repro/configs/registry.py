@@ -35,10 +35,27 @@ def get_shape(name: str) -> ShapeSpec:
     return SHAPES[name]
 
 
-def cell_supported(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
-    """Whether (arch × shape) is runnable; reason when skipped (DESIGN §4)."""
+def cell_supported(
+    cfg: ArchConfig, shape: ShapeSpec, mesh_shape: tuple[int, ...] | None = None
+) -> tuple[bool, str]:
+    """Whether (arch × shape) is runnable; reason when skipped (DESIGN §4).
+
+    With ``mesh_shape`` (the mesh dims, model axis last, data/pod axes
+    before it) the check also covers GSPMD layout constraints, so the
+    profiling campaign can drop unlowered-able cells at *plan* time instead
+    of quarantining them one compile failure at a time."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, "full-attention arch: 500k decode needs sub-quadratic attention"
+    if mesh_shape:
+        from repro.configs.base import mesh_split
+
+        _, n_data, n_model = mesh_split(tuple(mesh_shape))
+        if shape.global_batch % max(n_data, 1):
+            return False, (f"batch {shape.global_batch} not divisible by "
+                           f"{n_data} data-parallel devices")
+        if cfg.n_kv_heads % max(n_model, 1) and cfg.d_model % max(n_model, 1):
+            return False, (f"neither kv heads ({cfg.n_kv_heads}) nor d_model "
+                           f"({cfg.d_model}) shard over {n_model} model devices")
     return True, ""
 
 

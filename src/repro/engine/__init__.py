@@ -21,6 +21,7 @@ from repro.engine.calibrate import (
     default_workloads,
     evaluate_accuracy,
     measure_ground_truth,
+    timed_tuning_rows,
 )
 from repro.engine.devices import (
     DEVICE_REGISTRY,
@@ -70,4 +71,5 @@ __all__ = [
     "register_device",
     "resolve_device",
     "save_device_spec",
+    "timed_tuning_rows",
 ]

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core.features import FEATURE_NAMES, feature_matrix
 from repro.core.predictor import Perf4Sight
-from repro.engine.decompose import latency_terms, memory_terms
+from repro.engine.decompose import latency_terms, lm_roofline_terms, memory_terms
 from repro.engine.devices import DeviceSpec, resolve_device
 from repro.engine.types import (
     STAGE_INFER,
@@ -42,19 +42,28 @@ __all__ = [
 
 
 class ForestBackend:
-    """Batched prediction through fitted :class:`Perf4Sight` models, one per
-    stage.  N queries cost one feature-matrix build + one packed forest
-    traversal per attribute — the engine's hot path."""
+    """Batched prediction through fitted forests: :class:`Perf4Sight` models
+    (one per stage) for CNN conv-spec queries, and — once a profiling
+    campaign has been fitted (``repro.campaign.fit``) — an
+    :class:`~repro.campaign.fit.LMForest` for LM arch queries.  N queries
+    cost one feature-matrix build + one packed forest traversal per
+    attribute, with **zero jax compiles** on either path — the engine's
+    hot path."""
 
     name = "forest"
 
     def __init__(self, train: Perf4Sight | None = None,
-                 infer: Perf4Sight | None = None):
+                 infer: Perf4Sight | None = None, lm=None):
         self.predictors = {STAGE_TRAIN: train, STAGE_INFER: infer}
+        self.lm = lm
 
     def _predictor(self, stage: str) -> Perf4Sight | None:
         p = self.predictors.get(stage)
         return p if (p is not None and p.fitted) else None
+
+    def _lm_forest(self):
+        lm = self.lm
+        return lm if (lm is not None and getattr(lm, "fitted", False)) else None
 
     def cache_salt(self) -> str:
         """Content hash of the fitted models: a refit predictor invalidates
@@ -63,18 +72,26 @@ class ForestBackend:
         for stage in (STAGE_TRAIN, STAGE_INFER):
             p = self._predictor(stage)
             parts.append(p.content_hash() if p is not None else "-")
+        lm = self._lm_forest()
+        parts.append(lm.content_hash() if lm is not None else "-")
         return f"{self.name}:" + ":".join(parts)
 
     def supports(self, query: CostQuery) -> bool:
-        return query.spec is not None and self._predictor(query.stage) is not None
+        if query.spec is not None:
+            return self._predictor(query.stage) is not None
+        return query.arch is not None and self._lm_forest() is not None
 
     def estimate(self, queries: list[CostQuery]) -> list[CostEstimate]:
         results: list[CostEstimate | None] = [None] * len(queries)
         by_stage: dict[str, list[int]] = {}
+        lm_idx: list[int] = []
         for i, q in enumerate(queries):
             if not self.supports(q):
                 raise BackendUnavailable(f"forest backend cannot answer {q}")
-            by_stage.setdefault(q.stage, []).append(i)
+            if q.spec is not None:
+                by_stage.setdefault(q.stage, []).append(i)
+            else:
+                lm_idx.append(i)
         for stage, idx in by_stage.items():
             predictor = self._predictor(stage)
             g, p = predictor.predict_batch(
@@ -82,6 +99,15 @@ class ForestBackend:
             for j, i in enumerate(idx):
                 results[i] = CostEstimate(
                     gamma_mb=float(g[j]), phi_ms=float(p[j]), source=self.name)
+        if lm_idx:
+            lm = self._lm_forest()
+            g, p = lm.predict_queries([queries[i] for i in lm_idx])
+            detail = {"lm": True, "device": lm.default_device.name,
+                      "plan_hash": lm.meta.get("plan_hash")}
+            for j, i in enumerate(lm_idx):
+                results[i] = CostEstimate(
+                    gamma_mb=float(g[j]), phi_ms=float(p[j]), source=self.name,
+                    detail=dict(detail))
         return results
 
 
@@ -260,9 +286,9 @@ class AnalyticalBackend:
         gamma_mb = dev.round_alloc(
             mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6
         cost = parse_hlo_cost(compiled.as_text())
-        compute_s = cost.flops / dev.peak_flops
-        memory_s = cost.hbm_bytes / dev.hbm_bw
-        coll_s = cost.collective_bytes / dev.ici_bw
+        compute_s, memory_s, coll_s = (
+            float(v) for v in lm_roofline_terms(
+                cost.flops, cost.hbm_bytes, cost.collective_bytes, dev))
         phi_ms = dev.combine_terms(compute_s, memory_s, coll_s) * 1e3
         terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
         return CostEstimate(

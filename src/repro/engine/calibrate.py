@@ -40,6 +40,7 @@ __all__ = [
     "default_workloads",
     "measure_ground_truth",
     "nnls",
+    "timed_tuning_rows",
     "calibrate",
     "evaluate_accuracy",
 ]
@@ -189,6 +190,42 @@ def _mape(pred: np.ndarray, true: np.ndarray) -> float:
     return float(np.mean(np.abs(pred - true) / np.maximum(np.abs(true), 1e-12)))
 
 
+def timed_tuning_rows(tuning_cache) -> tuple[np.ndarray, np.ndarray]:
+    """Extra latency-fit rows from wall-clock-timed autotuner winners.
+
+    Every ``source:"timed"`` :class:`~repro.kernels.autotune.TuningCache`
+    entry is a measured (kernel launch → seconds) datapoint the device paid
+    for anyway during tuning; its tiling model rebuilds the (flops, bytes)
+    decomposition from the stored launch shape, giving the NNLS system
+    single-kernel rows alongside the whole-training-step workloads.  Those
+    rows pin down the roofline denominators at a granularity the step-level
+    grid can't (one kernel = one dominant term), which is why the tuner
+    feeds its measurements back here instead of discarding them.
+
+    Returns ``(A_rows, phi_s)`` with columns matching the latency system
+    ``[1, flops, bytes_moved]``; empty arrays when the cache has no timed
+    entries (the model-ranked path stores ``source:"model"``).
+    """
+    from repro.kernels.autotune import get_tiling
+
+    rows, phi = [], []
+    for entry in tuning_cache.entries():
+        if entry.get("source") != "timed" or not entry.get("measured_us"):
+            continue
+        shape = entry.get("shape")
+        if not shape:
+            continue  # pre-shape-stamping cache entry: nothing to rebuild
+        try:
+            cost = get_tiling(entry["kernel"]).cost(shape, entry["config"])
+        except KeyError:
+            continue  # tiling module no longer registered
+        rows.append([1.0, cost.flops, cost.hbm_bytes])
+        phi.append(entry["measured_us"] * 1e-6)
+    if not rows:
+        return np.zeros((0, 3)), np.zeros(0)
+    return np.asarray(rows, dtype=np.float64), np.asarray(phi, dtype=np.float64)
+
+
 def calibrate(
     backend,
     profiler,
@@ -196,6 +233,7 @@ def calibrate(
     *,
     cache: DatasetCache | str | None = None,
     datapoints: list[Datapoint] | None = None,
+    tuning_cache=None,
     name: str | None = None,
     apply: bool = True,
 ) -> DeviceSpec:
@@ -207,8 +245,11 @@ def calibrate(
     backend's current device (capacity/interconnect/granularity carry
     over).  Callers that already measured the grid (via
     :func:`measure_ground_truth`) pass it as ``datapoints`` and no
-    re-measurement happens.  With ``apply=True`` (default) the backend is
-    switched to the fitted spec in place — its ``cache_salt()`` changes
+    re-measurement happens.  A ``tuning_cache``
+    (:class:`~repro.kernels.autotune.TuningCache`) contributes its
+    wall-clock-timed autotuner winners as extra latency rows
+    (:func:`timed_tuning_rows`).  With ``apply=True`` (default) the backend
+    is switched to the fitted spec in place — its ``cache_salt()`` changes
     with it, so engine caches never serve pre-calibration estimates
     afterwards.
     """
@@ -229,7 +270,16 @@ def calibrate(
 
     # Latency: phi = c0 + c1·flops + c2·bytes, c ≥ 0.
     ones = np.ones_like(phi_s)
-    c = nnls(np.stack([ones, flops, bytes_moved], axis=1), phi_s)
+    A_lat = np.stack([ones, flops, bytes_moved], axis=1)
+    b_lat = phi_s
+    n_timed = 0
+    if tuning_cache is not None:
+        A_timed, phi_timed = timed_tuning_rows(tuning_cache)
+        n_timed = len(phi_timed)
+        if n_timed:
+            A_lat = np.concatenate([A_lat, A_timed])
+            b_lat = np.concatenate([b_lat, phi_timed])
+    c = nnls(A_lat, b_lat)
     # A zero coefficient means that term never binds on this grid; keep the
     # term inert with an effectively-infinite (but finite, serializable)
     # denominator instead of dividing by zero.
@@ -254,6 +304,7 @@ def calibrate(
             "base_device": base.name,
             "n_workloads": len(dps),
             "n_profiled": profiled,
+            "n_timed_kernel_rows": n_timed,
             "phi_mape": _mape(c[0] + c[1] * flops + c[2] * bytes_moved, phi_s),
             "gamma_mape": _mape(m[0] + m[1] * weight_mb + m[2] * act_mb,
                                 gamma_mb),

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.features import FEATURE_NAMES
 
-__all__ = ["latency_terms", "memory_terms"]
+__all__ = ["latency_terms", "memory_terms", "lm_roofline_terms"]
 
 _I_W = FEATURE_NAMES.index("mem_w")
 _I_IFM = FEATURE_NAMES.index("mem_ifm_grad")
@@ -37,6 +37,26 @@ def latency_terms(feats: np.ndarray, bytes_per_el: int) -> tuple[np.ndarray, np.
     flops = 2.0 * F[:, _I_OPS]
     bytes_moved = bytes_per_el * (F[:, _I_ALLOC] + F[:, _I_I2C])
     return flops, bytes_moved
+
+
+def lm_roofline_terms(
+    flops, hbm_bytes, collective_bytes, device
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """LM-cell analogue of :func:`latency_terms`: the three roofline seconds
+    (compute, memory, collective) a device spec turns HLO-parse counts into.
+
+    The SAME single-source-of-truth contract as the CNN terms above: the
+    analytical prediction path (``backends.AnalyticalBackend``), the
+    campaign featurizer (``campaign/lm_features.py``) and the parse_hlo_cost
+    constant fit (``campaign/fit.py``) all divide by the same denominators,
+    so fitted device constants transfer between all three.  Inputs may be
+    scalars or arrays; outputs follow numpy broadcasting.
+    """
+    flops = np.asarray(flops, dtype=np.float64)
+    hbm_bytes = np.asarray(hbm_bytes, dtype=np.float64)
+    collective_bytes = np.asarray(collective_bytes, dtype=np.float64)
+    return (flops / device.peak_flops, hbm_bytes / device.hbm_bw,
+            collective_bytes / device.ici_bw)
 
 
 def memory_terms(feats: np.ndarray, bytes_per_el: int) -> tuple[np.ndarray, np.ndarray]:

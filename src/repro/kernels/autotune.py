@@ -163,6 +163,7 @@ _BUILTIN_MODULES = (
     "repro.kernels.conv_mm.tiling",
     "repro.kernels.flash_attention.tiling",
     "repro.kernels.ssm_scan.tiling",
+    "repro.kernels.moe_dispatch.tiling",
 )
 
 
@@ -219,6 +220,11 @@ class TuningCache:
 
     def put(self, key: str, entry: dict) -> None:
         self._data[key] = dict(entry)
+
+    def entries(self) -> list[dict]:
+        """All cached winners (copies) — the calibration residual feed
+        (``engine/calibrate.timed_tuning_rows``) iterates these."""
+        return [dict(e) for e in self._data.values()]
 
     def flush(self) -> None:
         # Merge-on-flush: re-read the file and lay our entries over it, so
@@ -358,6 +364,7 @@ class KernelTuner:
         return {
             "kernel": tiling.name,
             "config": dict(best_cfg),
+            "shape": dict(shape),  # lets calibration rebuild the cost terms
             "source": source,
             "device": device.name,
             "model_us": best_t * 1e6 if source == "model" else

@@ -5,6 +5,9 @@ os.environ["XLA_FLAGS"] = (
 )
 # ^ MUST precede any jax import: jax locks the device count on first init.
 # This is dry-run-only; smoke tests and benches see the single real device.
+# Library callers that must NOT fake the device count (the profiling
+# campaign, tests) import repro.launch.lowering instead — the compile
+# machinery lives there now.
 
 """Multi-pod dry-run (deliverable e).
 
@@ -20,174 +23,38 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
         --out benchmarks/cache/dryrun.jsonl
+
+``--out`` is an append-only JSONL ledger with one record per cell, written
+through the ``core/fileio`` durable-append path (O_APPEND + fsync): an
+interrupted run never leaves a torn ledger, and a restarted run skips the
+cells already recorded instead of double-counting them.
 """
 
 import argparse
-import json
-import time
 import traceback
-
-import jax
-import jax.numpy as jnp
 
 from repro.configs.base import SHAPES
 from repro.configs.registry import ARCH_IDS, cell_supported, get_config
-from repro.core.roofline import model_flops_for_cell, roofline_from_compiled
-from repro.distributed import sharding as sh
+from repro.core.fileio import append_jsonl, load_jsonl_tolerant
+from repro.launch.lowering import compile_cell, lower_cell, make_train_step  # noqa: F401 — re-exported for b/c
 from repro.launch.mesh import make_mesh, make_production_mesh
-from repro.models import transformer as T
-from repro.optim.optimizer import OptimizerConfig, apply_updates, init_opt_state
 
 
-def _opt_state_specs_like(cfg, opt_cfg: OptimizerConfig):
-    """ShapeDtypeStructs for the optimizer state (f32 slots)."""
-    pspecs = T.param_specs(cfg)
-    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
-    opt = {"step": jax.ShapeDtypeStruct((), jnp.int32), "m": jax.tree.map(f32, pspecs)}
-    if opt_cfg.kind == "adamw":
-        opt["v"] = jax.tree.map(f32, pspecs)
-    return opt
+def _cell_id(arch: str, shape: str, mesh_desc: str) -> str:
+    return f"{arch}|{shape}|{mesh_desc}"
 
 
-def make_train_step(cfg, opt_cfg: OptimizerConfig, *, microbatches: int = 1,
-                    seq_chunk: int | None = None):
-    """Real train step; perf knobs:
-
-    microbatches — gradient accumulation via lax.scan over batch slices
-        (activation temp ∝ 1/M; the per-microbatch gradient all-reduce
-        overlaps the next microbatch's compute in XLA's schedule).
-    seq_chunk — chunked CE loss (see transformer.loss_fn).
-    """
-
-    def loss(params, batch):
-        return T.loss_fn(params, batch, cfg, seq_chunk=seq_chunk)
-
-    def train_step(state, batch):
-        if microbatches == 1:
-            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
-                state["params"], batch)
-        else:
-            mb = jax.tree.map(
-                lambda a: a.reshape(microbatches, a.shape[0] // microbatches,
-                                    *a.shape[1:]),
-                batch)
-
-            def acc_fn(carry, mbatch):
-                g_acc, l_acc = carry
-                (l, _), g = jax.value_and_grad(loss, has_aux=True)(
-                    state["params"], mbatch)
-                g_acc = jax.tree.map(
-                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-                return (g_acc, l_acc + l), None
-
-            g0 = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
-            (grads, l_sum), _ = jax.lax.scan(acc_fn, (g0, jnp.float32(0.0)), mb)
-            grads = jax.tree.map(lambda g: g / microbatches, grads)
-            l = l_sum / microbatches
-        new_params, new_opt, om = apply_updates(
-            state["params"], grads, state["opt"], opt_cfg
-        )
-        return {"params": new_params, "opt": new_opt}, {"loss": l, **om}
-
-    return train_step
-
-
-def lower_cell(
-    arch: str,
-    shape_name: str,
-    mesh,
-    mesh_desc: str,
-    *,
-    opt_kind: str = "adamw",
-    remat: bool = True,
-    fsdp: bool | None = None,
-    print_analysis: bool = True,
-    microbatches: int = 1,
-    seq_chunk: int | None = None,
-    sp: bool = True,
-):
-    """Lower + compile one cell on ``mesh``; return the roofline report."""
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
-    opt_cfg = OptimizerConfig(kind=opt_kind)
-    n_dev = mesh.devices.size
-    from repro.models import layers as L
-
-    L.set_hint_mesh(mesh, sp=sp)  # activation sharding hints (MoE buffers etc.)
-
-    t0 = time.perf_counter()
-    if shape.kind == "train":
-        specs = T.input_specs(cfg, shape)
-        state_specs = {"params": specs["params"],
-                       "opt": _opt_state_specs_like(cfg, opt_cfg)}
-        state_sh = sh.to_named(mesh, sh.state_pspecs(cfg, mesh, kind=opt_kind, fsdp=fsdp))
-        batch_sh = sh.to_named(mesh, sh.batch_pspecs(cfg, shape, mesh))
-        fn = jax.jit(
-            make_train_step(cfg, opt_cfg, microbatches=microbatches,
-                            seq_chunk=seq_chunk),
-            in_shardings=(state_sh, batch_sh),
-            out_shardings=(state_sh, None),
-            donate_argnums=(0,),
-        )
-        with mesh:
-            lowered = fn.lower(state_specs, specs["batch"])
-    elif shape.kind == "prefill":
-        specs = T.input_specs(cfg, shape)
-        param_sh = sh.to_named(mesh, sh.param_pspecs(cfg, mesh, fsdp=bool(fsdp)))
-        batch_sh = sh.to_named(mesh, sh.batch_pspecs(cfg, shape, mesh))
-        cache_sh = sh.to_named(mesh, sh.cache_pspecs(cfg, shape, mesh))
-        max_len = shape.seq_len + cfg.n_prefix
-
-        def prefill_fn(params, batch):
-            return T.prefill(params, batch, cfg, max_len=max_len)
-
-        out_sh = {"logits": None, "cache": cache_sh, "cache_len": None}
-        if cfg.n_encoder_layers:
-            out_sh["memory"] = None
-        fn = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh),
-                     out_shardings=out_sh)
-        with mesh:
-            lowered = fn.lower(specs["params"], specs["batch"])
-    else:  # decode
-        specs = T.input_specs(cfg, shape)
-        param_sh = sh.to_named(mesh, sh.param_pspecs(cfg, mesh, fsdp=False))
-        batch_sh = sh.to_named(mesh, sh.batch_pspecs(cfg, shape, mesh))
-        cache_sh = sh.to_named(mesh, sh.cache_pspecs(cfg, shape, mesh))
-
-        def decode_fn(params, cache, batch):
-            return T.decode_step(params, cache, batch, cfg)
-
-        fn = jax.jit(
-            decode_fn,
-            in_shardings=(param_sh, cache_sh, batch_sh),
-            out_shardings=(None, cache_sh),
-            donate_argnums=(1,),
-        )
-        with mesh:
-            lowered = fn.lower(specs["params"], specs["cache"], specs["batch"])
-
-    with mesh:
-        compiled = lowered.compile()
-    compile_s = time.perf_counter() - t0
-
-    if print_analysis:
-        print(compiled.memory_analysis())
-        ca = compiled.cost_analysis()
-        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
-        print({k: v for k, v in dict(ca).items()
-               if k in ("flops", "bytes accessed")})
-
-    report = roofline_from_compiled(
-        compiled,
-        arch=arch,
-        shape=shape_name,
-        mesh_desc=mesh_desc,
-        n_devices=n_dev,
-        model_flops_total=model_flops_for_cell(cfg, shape),
-        compile_s=compile_s,
-    )
-    return report
+def _recorded_cells(path: str | None) -> set[str]:
+    """Cell ids already present in the --out ledger (any status): a restart
+    resumes where the interrupted run stopped instead of recompiling —
+    and re-appending — every earlier cell."""
+    if not path:
+        return set()
+    done = set()
+    for rec in load_jsonl_tolerant(path):
+        if {"arch", "shape", "mesh"} <= rec.keys():
+            done.add(_cell_id(rec["arch"], rec["shape"], rec["mesh"]))
+    return done
 
 
 def main() -> None:
@@ -206,6 +73,9 @@ def main() -> None:
     ap.add_argument("--loss-chunk", type=int, default=None)
     ap.add_argument("--no-sp", action="store_true",
                     help="disable sequence-parallel residual-stream hint")
+    ap.add_argument("--redo", action="store_true",
+                    help="recompile cells already present in --out (the new "
+                         "record is appended; readers keep the last one)")
     args = ap.parse_args()
 
     archs = [args.arch] if args.arch else list(ARCH_IDS)
@@ -222,22 +92,26 @@ def main() -> None:
         if args.multi_pod in ("on", "both"):
             meshes.append((make_production_mesh(multi_pod=True), "2x16x16"))
 
+    recorded = set() if args.redo else _recorded_cells(args.out)
     fsdp = None if args.fsdp is None else (args.fsdp == "on")
     results = []
     for mesh, mesh_desc in meshes:
         for arch in archs:
             cfg = get_config(arch)
             for shape_name in shapes:
+                if _cell_id(arch, shape_name, mesh_desc) in recorded:
+                    print(f"DONE {arch} × {shape_name} [{mesh_desc}] "
+                          "(in ledger; --redo to recompile)", flush=True)
+                    continue
                 ok, why = cell_supported(cfg, SHAPES[shape_name])
                 if not ok:
                     print(f"SKIP {arch} × {shape_name} [{mesh_desc}]: {why}",
                           flush=True)
                     if args.out:
-                        with open(args.out, "a") as f:
-                            f.write(json.dumps({
-                                "arch": arch, "shape": shape_name,
-                                "mesh": mesh_desc, "skipped": why,
-                            }) + "\n")
+                        append_jsonl(args.out, {
+                            "arch": arch, "shape": shape_name,
+                            "mesh": mesh_desc, "skipped": why,
+                        })
                     continue
                 print(f"=== {arch} × {shape_name} [{mesh_desc}] ===", flush=True)
                 try:
@@ -251,17 +125,15 @@ def main() -> None:
                     traceback.print_exc()
                     print(f"FAILED {arch} × {shape_name} [{mesh_desc}]", flush=True)
                     if args.out:
-                        with open(args.out, "a") as f:
-                            f.write(json.dumps({
-                                "arch": arch, "shape": shape_name,
-                                "mesh": mesh_desc, "failed": True,
-                            }) + "\n")
+                        append_jsonl(args.out, {
+                            "arch": arch, "shape": shape_name,
+                            "mesh": mesh_desc, "failed": True,
+                        })
                     continue
                 print(rep.summary(), flush=True)
                 results.append(rep)
                 if args.out:
-                    with open(args.out, "a") as f:
-                        f.write(json.dumps(rep.to_dict()) + "\n")
+                    append_jsonl(args.out, rep.to_dict())
 
     print(f"\n{len(results)} cells compiled OK")
 

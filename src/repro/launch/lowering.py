@@ -1,0 +1,204 @@
+"""AOT lowering of (arch × shape × mesh) cells — shared by dry-run and
+profiling campaigns.
+
+This is the compile machinery that used to live inside ``launch/dryrun.py``,
+extracted so library callers (``repro.campaign.runner``) can lower cells
+without importing the dry-run module — whose import mutates ``XLA_FLAGS``
+to fake a 512-device host, exactly what a timing campaign on the real
+device must NOT inherit.  Importing this module never touches jax device
+state.
+
+``compile_cell`` returns the compiled executable (for timing /
+``memory_analysis`` / HLO parsing); ``lower_cell`` wraps it into the
+roofline report the dry-run prints.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ShapeSpec
+from repro.configs.registry import get_config
+from repro.core.roofline import model_flops_for_cell, roofline_from_compiled
+from repro.distributed import sharding as sh
+from repro.models import transformer as T
+from repro.optim.optimizer import OptimizerConfig, apply_updates
+
+__all__ = ["make_train_step", "compile_cell", "lower_cell"]
+
+
+def _opt_state_specs_like(cfg, opt_cfg: OptimizerConfig):
+    """ShapeDtypeStructs for the optimizer state (f32 slots)."""
+    pspecs = T.param_specs(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    opt = {"step": jax.ShapeDtypeStruct((), jnp.int32), "m": jax.tree.map(f32, pspecs)}
+    if opt_cfg.kind == "adamw":
+        opt["v"] = jax.tree.map(f32, pspecs)
+    return opt
+
+
+def make_train_step(cfg, opt_cfg: OptimizerConfig, *, microbatches: int = 1,
+                    seq_chunk: int | None = None):
+    """Real train step; perf knobs:
+
+    microbatches — gradient accumulation via lax.scan over batch slices
+        (activation temp ∝ 1/M; the per-microbatch gradient all-reduce
+        overlaps the next microbatch's compute in XLA's schedule).
+    seq_chunk — chunked CE loss (see transformer.loss_fn).
+    """
+
+    def loss(params, batch):
+        return T.loss_fn(params, batch, cfg, seq_chunk=seq_chunk)
+
+    def train_step(state, batch):
+        if microbatches == 1:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                state["params"], batch)
+        else:
+            mb = jax.tree.map(
+                lambda a: a.reshape(microbatches, a.shape[0] // microbatches,
+                                    *a.shape[1:]),
+                batch)
+
+            def acc_fn(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss, has_aux=True)(
+                    state["params"], mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads, l_sum), _ = jax.lax.scan(acc_fn, (g0, jnp.float32(0.0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            l = l_sum / microbatches
+        new_params, new_opt, om = apply_updates(
+            state["params"], grads, state["opt"], opt_cfg
+        )
+        return {"params": new_params, "opt": new_opt}, {"loss": l, **om}
+
+    return train_step
+
+
+def compile_cell(
+    cfg,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    opt_kind: str = "adamw",
+    fsdp: bool | None = None,
+    microbatches: int = 1,
+    seq_chunk: int | None = None,
+    sp: bool = True,
+    donate: bool = True,
+):
+    """Lower + compile one (cfg × shape) cell on ``mesh``.
+
+    Returns ``(compiled, input_specs, compile_s)``: the AOT executable, the
+    ShapeDtypeStruct tree of its positional arguments (so a caller can
+    materialize inputs and time real executions), and the wall-clock
+    compile time.  ``donate=False`` keeps every input buffer alive across
+    calls — required when the same materialized arguments are executed
+    repeatedly for timing.
+    """
+    opt_cfg = OptimizerConfig(kind=opt_kind)
+    from repro.models import layers as L
+
+    L.set_hint_mesh(mesh, sp=sp)  # activation sharding hints (MoE buffers etc.)
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        specs = T.input_specs(cfg, shape)
+        state_specs = {"params": specs["params"],
+                       "opt": _opt_state_specs_like(cfg, opt_cfg)}
+        state_sh = sh.to_named(mesh, sh.state_pspecs(cfg, mesh, kind=opt_kind, fsdp=fsdp))
+        batch_sh = sh.to_named(mesh, sh.batch_pspecs(cfg, shape, mesh))
+        fn = jax.jit(
+            make_train_step(cfg, opt_cfg, microbatches=microbatches,
+                            seq_chunk=seq_chunk),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,) if donate else (),
+        )
+        args = (state_specs, specs["batch"])
+    elif shape.kind == "prefill":
+        specs = T.input_specs(cfg, shape)
+        param_sh = sh.to_named(mesh, sh.param_pspecs(cfg, mesh, fsdp=bool(fsdp)))
+        batch_sh = sh.to_named(mesh, sh.batch_pspecs(cfg, shape, mesh))
+        cache_sh = sh.to_named(mesh, sh.cache_pspecs(cfg, shape, mesh))
+        max_len = shape.seq_len + cfg.n_prefix
+
+        def prefill_fn(params, batch):
+            return T.prefill(params, batch, cfg, max_len=max_len)
+
+        out_sh = {"logits": None, "cache": cache_sh, "cache_len": None}
+        if cfg.n_encoder_layers:
+            out_sh["memory"] = None
+        fn = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh),
+                     out_shardings=out_sh)
+        args = (specs["params"], specs["batch"])
+    else:  # decode
+        specs = T.input_specs(cfg, shape)
+        param_sh = sh.to_named(mesh, sh.param_pspecs(cfg, mesh, fsdp=False))
+        batch_sh = sh.to_named(mesh, sh.batch_pspecs(cfg, shape, mesh))
+        cache_sh = sh.to_named(mesh, sh.cache_pspecs(cfg, shape, mesh))
+
+        def decode_fn(params, cache, batch):
+            return T.decode_step(params, cache, batch, cfg)
+
+        fn = jax.jit(
+            decode_fn,
+            in_shardings=(param_sh, cache_sh, batch_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,) if donate else (),
+        )
+        args = (specs["params"], specs["cache"], specs["batch"])
+
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    compile_s = time.perf_counter() - t0
+    return compiled, args, compile_s
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    mesh_desc: str,
+    *,
+    opt_kind: str = "adamw",
+    remat: bool = True,
+    fsdp: bool | None = None,
+    print_analysis: bool = True,
+    microbatches: int = 1,
+    seq_chunk: int | None = None,
+    sp: bool = True,
+):
+    """Lower + compile one cell on ``mesh``; return the roofline report."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    compiled, _, compile_s = compile_cell(
+        cfg, shape, mesh, opt_kind=opt_kind, fsdp=fsdp,
+        microbatches=microbatches, seq_chunk=seq_chunk, sp=sp,
+    )
+
+    if print_analysis:
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        print({k: v for k, v in dict(ca).items()
+               if k in ("flops", "bytes accessed")})
+
+    return roofline_from_compiled(
+        compiled,
+        arch=arch,
+        shape=shape_name,
+        mesh_desc=mesh_desc,
+        n_devices=mesh.devices.size,
+        model_flops_total=model_flops_for_cell(cfg, shape),
+        compile_s=compile_s,
+    )

@@ -48,25 +48,38 @@ def main() -> None:
                          "before comparing to the budget (0 = exact)")
     ap.add_argument("--estimate-cache", default=None,
                     help="JSON path for the engine's on-disk estimate cache")
+    ap.add_argument("--lm-forest", default=None,
+                    help="campaign-fitted LM forest (.npz/.json from "
+                         "`python -m repro.campaign fit`): admission is then "
+                         "answered by the forest with zero compiles, falling "
+                         "back to the analytical AOT path only for cells the "
+                         "forest cannot answer")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
 
     admission = None
-    if args.memory_budget_gb is not None or args.device is not None:
+    if (args.memory_budget_gb is not None or args.device is not None
+            or args.lm_forest is not None):
         from repro.engine import (
             AnalyticalBackend,
             CostEngine,
             CostQuery,
             EnsembleBackend,
+            ForestBackend,
             resolve_device,
         )
 
         device = resolve_device(args.device) if args.device else None
+        chain = []
+        if args.lm_forest:
+            from repro.campaign import LMForest
+
+            chain.append(ForestBackend(lm=LMForest.load(args.lm_forest)))
+        chain.append(AnalyticalBackend(reduced=args.reduced, lm_device=device))
         engine = CostEngine(
-            EnsembleBackend([AnalyticalBackend(reduced=args.reduced,
-                                               lm_device=device)]),
+            EnsembleBackend(chain),
             cache=args.estimate_cache,
             device=device,
         )

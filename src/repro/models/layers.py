@@ -103,6 +103,40 @@ def _tuned_attention_block_q(q, k, causal: bool) -> int:
                             tiling.default(shape)).get("block_q", 512))
 
 
+def _tuned_moe_dispatch(B: int, S: int, cfg, dtype) -> tuple[int, float]:
+    """(groups, capacity_factor) for :func:`moe_block`, from the autotuner
+    (the ``moe_dispatch`` tiling model; trace-time only).
+
+    Falls back to the historical constants — ``gcd(B, moe_groups or 32)``
+    groups at the configured capacity factor.  The tuned factor is clamped
+    to never fall below the configured one: capacity controls token drops
+    (model quality), so the tuner may only add slack, never remove it.
+
+    Reproducibility contract: unlike the attention/SSM block sizes, these
+    knobs change the routing arithmetic (group segmentation, slot counts),
+    so the SAME checkpoint can produce numerically different logits under
+    a different tuning cache or device.  Bit-reproducibility across
+    machines therefore requires either ``REPRO_AUTOTUNE=0`` (config
+    constants everywhere) or shipping the tuning-cache file with the
+    checkpoint — the cache is content-keyed and device-salted exactly so
+    it CAN be shipped.
+    """
+    from repro.kernels.autotune import tuned_config
+    from repro.kernels.moe_dispatch import tiling
+
+    g_default = math.gcd(B, getattr(cfg, "moe_groups", 32) or 32)
+    shape = tiling.shape_key(B, S, cfg.d_model, cfg.n_experts,
+                             cfg.experts_per_token, cfg.moe_d_ff_,
+                             cfg.capacity_factor, dtype)
+    tuned = tuned_config("moe_dispatch", shape,
+                         {"groups": g_default,
+                          "capacity_factor": cfg.capacity_factor})
+    groups = math.gcd(B, int(tuned.get("groups", g_default)) or g_default)
+    factor = max(float(tuned.get("capacity_factor", cfg.capacity_factor)),
+                 cfg.capacity_factor)
+    return groups, factor
+
+
 def _tuned_ssm_chunk(xh, n_state: int, default_chunk: int) -> int:
     """Chunk length for :func:`ssd_scan`, from the autotuner (the
     ``ssm_scan`` tiling model; trace-time only, falls back to the config
@@ -338,9 +372,9 @@ def moe_block(x, p, cfg):
     """
     B, S, D = x.shape
     E, K = cfg.n_experts, cfg.experts_per_token
-    G = math.gcd(B, getattr(cfg, "moe_groups", 32) or 32)
+    G, factor = _tuned_moe_dispatch(B, S, cfg, x.dtype)
     Tg = (B // G) * S
-    C = moe_capacity(Tg, E, K, cfg.capacity_factor)
+    C = moe_capacity(Tg, E, K, factor)
     xg = x.reshape(G, Tg, D)
 
     logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),

@@ -1,0 +1,558 @@
+"""Campaign subsystem: planning, resumable running, fitting, engine wiring.
+
+Most tests drive the runner with a deterministic fake measurement (no jax,
+milliseconds); one smoke test compiles a real 4-cell host-CPU grid end to
+end (tier-1: small enough to stay out of the slow marker)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.campaign import (
+    CampaignCell,
+    CampaignLedger,
+    CampaignRunner,
+    LMForest,
+    fit_hlo_constants,
+    fit_lm_forest,
+    plan_grid,
+    register_lm_forest,
+    smoke_plan,
+)
+from repro.campaign.plan import SMOKE_SHAPES, load_plan, mesh_dims
+from repro.core.fileio import append_jsonl, load_jsonl_tolerant
+from repro.engine import CostEngine, CostQuery
+from repro.engine.backends import AnalyticalBackend, EnsembleBackend, ForestBackend
+
+
+def fake_measure(cell: CampaignCell) -> dict:
+    """Deterministic ground-truth stand-in: targets are smooth functions of
+    the cell geometry, so forests have signal and re-runs are bit-equal."""
+    t = cell.shape.tokens
+    train = cell.shape.kind == "train"
+    return {
+        "gamma_mb": 8.0 + 0.02 * t + (4.0 if train else 0.0),
+        "phi_ms": 1.0 + 0.004 * t * (3.0 if train else 1.0),
+        "compile_s": 0.0,
+        "flops": 1e6 * t * (3.0 if train else 1.0),
+        "hbm_bytes": 2e5 * t,
+        "collective_bytes": 0.0,
+        "temp_mb": 1.0, "arg_mb": 1.0, "n_devices": 1, "executed": True,
+    }
+
+
+def run_fake_campaign(plan, ledger_path, **kw):
+    runner = CampaignRunner(plan, ledger_path, measure=fake_measure, **kw)
+    return runner, runner.run_campaign()
+
+
+# ---------------------------------------------------------------------------
+# fileio: the durable-append ledger contract
+# ---------------------------------------------------------------------------
+
+
+class TestJsonlFileio:
+    def test_roundtrip_and_append(self, tmp_path):
+        p = str(tmp_path / "l.jsonl")
+        assert load_jsonl_tolerant(p) == []
+        append_jsonl(p, {"a": 1})
+        append_jsonl(p, [{"b": 2}, {"c": 3}])
+        assert load_jsonl_tolerant(p) == [{"a": 1}, {"b": 2}, {"c": 3}]
+
+    def test_torn_final_line_dropped(self, tmp_path):
+        p = str(tmp_path / "l.jsonl")
+        append_jsonl(p, [{"a": 1}, {"b": 2}])
+        with open(p, "a") as f:
+            f.write('{"torn": tru')  # crash mid-append
+        assert load_jsonl_tolerant(p) == [{"a": 1}, {"b": 2}]
+        # and appends after the torn line still parse (new line boundary)
+        append_jsonl(p, {"d": 4})
+        recs = load_jsonl_tolerant(p)
+        assert {"d": 4} in recs and len(recs) == 3
+
+    def test_non_dict_rows_ignored(self, tmp_path):
+        p = str(tmp_path / "l.jsonl")
+        with open(p, "w") as f:
+            f.write('[1,2]\n"str"\n{"ok": 1}\n\n')
+        assert load_jsonl_tolerant(p) == [{"ok": 1}]
+
+
+# ---------------------------------------------------------------------------
+# plan
+# ---------------------------------------------------------------------------
+
+
+class TestPlan:
+    def test_reproducible_hash(self):
+        a = smoke_plan(subsample=4, seed=7)
+        b = smoke_plan(subsample=4, seed=7)
+        assert a.plan_hash == b.plan_hash
+        assert [c.key for c in a.cells] == [c.key for c in b.cells]
+        assert a.plan_hash != smoke_plan(subsample=4, seed=8).plan_hash
+
+    def test_stratified_subsample_covers_archs(self):
+        plan = smoke_plan(subsample=4, seed=0)
+        assert {c.arch for c in plan.cells} == {"qwen3-4b", "stablelm-1.6b"}
+
+    def test_unsupported_cells_skipped(self):
+        # batch 2 cannot split over 4 data-parallel devices
+        plan = plan_grid(archs=("qwen3-4b",), shapes=("smoke_train_16x2",),
+                         meshes=("4x1",))
+        assert len(plan.cells) == 0
+        assert plan.skipped and "not divisible" in plan.skipped[0]["why"]
+
+    def test_save_load_and_tamper_detection(self, tmp_path):
+        plan = smoke_plan(subsample=3, seed=0)
+        p = str(tmp_path / "plan.json")
+        plan.save(p)
+        loaded = load_plan(p)
+        assert loaded.plan_hash == plan.plan_hash
+        assert loaded.cells == plan.cells
+        blob = json.load(open(p))
+        blob["cells"] = blob["cells"][1:]
+        json.dump(blob, open(p, "w"))
+        with pytest.raises(ValueError, match="inconsistent"):
+            load_plan(p)
+
+    def test_mesh_dims(self):
+        assert mesh_dims("2x16x16") == (2, 16, 16)
+        with pytest.raises(ValueError):
+            mesh_dims("banana")
+
+
+# ---------------------------------------------------------------------------
+# runner: resume semantics (the satellite's kill/restart contract)
+# ---------------------------------------------------------------------------
+
+
+class TestRunnerResume:
+    def test_interrupted_run_resumes_without_remeasuring(self, tmp_path):
+        plan = smoke_plan(subsample=6, seed=0)
+        led = str(tmp_path / "ledger.jsonl")
+        calls: list[str] = []
+
+        def counting(cell):
+            calls.append(cell.key)
+            return fake_measure(cell)
+
+        # "kill" the first runner after 2 cells
+        r1 = CampaignRunner(plan, led, measure=counting)
+        out1 = r1.run_campaign(max_cells=2)
+        assert out1["measured"] == 2 and out1["remaining"] == len(plan) - 2
+
+        # a crash can also tear the in-flight record — simulate it
+        with open(led, "a") as f:
+            f.write('{"key": "half-writ')
+
+        # fresh process: new runner over the same ledger file
+        r2 = CampaignRunner(plan, led, measure=counting)
+        out2 = r2.run_campaign()
+        assert out2["measured"] == len(plan) - 2
+        assert out2["remaining"] == 0
+        # no cell measured twice across the kill/restart
+        assert len(calls) == len(set(calls)) == len(plan)
+
+        # third run: everything recorded, zero work
+        _, out3 = run_fake_campaign(plan, led)
+        assert out3["measured"] == 0 and out3["failed"] == 0
+
+    def test_final_ledger_equals_uninterrupted_run(self, tmp_path):
+        plan = smoke_plan(subsample=6, seed=0)
+        a, b = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+        # interrupted in three slices vs one uninterrupted pass
+        for max_cells in (2, 3, None):
+            CampaignRunner(plan, a, measure=fake_measure).run_campaign(
+                max_cells=max_cells)
+        run_fake_campaign(plan, b)
+        rec_a = {r["key"]: r for r in CampaignLedger(a).records()}
+        rec_b = {r["key"]: r for r in CampaignLedger(b).records()}
+        assert rec_a == rec_b
+
+    def test_quarantine_persists_and_is_not_retried(self, tmp_path):
+        plan = smoke_plan(subsample=6, seed=0)
+        led = str(tmp_path / "ledger.jsonl")
+        poison = plan.cells[2].key
+        attempts: list[str] = []
+
+        def flaky(cell):
+            attempts.append(cell.key)
+            if cell.key == poison:
+                raise RuntimeError("unlowerable layout")
+            return fake_measure(cell)
+
+        r1 = CampaignRunner(plan, led, measure=flaky)
+        out1 = r1.run_campaign()
+        assert out1["failed"] == 1 and out1["remaining"] == 0
+        assert CampaignLedger(led).failed_keys == {poison}
+        rec = CampaignLedger(led).get(poison)
+        assert rec["status"] == "failed" and "unlowerable" in rec["error"]
+
+        # restart: quarantined cell is NOT re-attempted...
+        r2 = CampaignRunner(plan, led, measure=flaky)
+        assert r2.run_campaign()["measured"] == 0
+        assert attempts.count(poison) == 1
+        # ...unless explicitly asked
+        r3 = CampaignRunner(plan, led, measure=fake_measure, retry_failed=True)
+        assert r3.run_campaign()["measured"] == 1
+        assert CampaignLedger(led).failed_keys == set()
+
+    def test_shards_partition_the_grid(self, tmp_path):
+        plan = smoke_plan(seed=0)  # all 16 cells
+        led = str(tmp_path / "ledger.jsonl")
+        runner = CampaignRunner(plan, led, measure=fake_measure)
+        shards = [runner.shard_cells(i, 3) for i in range(3)]
+        keys = [c.key for s in shards for c in s]
+        assert sorted(keys) == sorted(c.key for c in plan.cells)
+        # two workers, one shared ledger: disjoint work, union complete
+        CampaignRunner(plan, led, measure=fake_measure).run_campaign(0, 2)
+        CampaignRunner(plan, led, measure=fake_measure).run_campaign(1, 2)
+        assert CampaignLedger(led).ok_keys == {c.key for c in plan.cells}
+
+
+# ---------------------------------------------------------------------------
+# fit: forests, constants, persistence
+# ---------------------------------------------------------------------------
+
+
+def _fitted(tmp_path, n=12):
+    plan = smoke_plan(subsample=n, seed=0)
+    led = str(tmp_path / "ledger.jsonl")
+    runner, _ = run_fake_campaign(plan, led)
+    records = runner.ledger.records("ok")
+    return records, fit_lm_forest(records, holdout_frac=0.25, seed=0)
+
+
+class TestFit:
+    def test_forest_learns_the_fake_grid(self, tmp_path):
+        records, forest = _fitted(tmp_path)
+        assert forest.fitted
+        assert forest.meta["n_heldout"] >= 1
+        # the fake targets are smooth in the features: held-out error small
+        assert forest.meta["holdout_phi_mape"] < 0.5
+        assert forest.meta["holdout_gamma_mape"] < 0.5
+
+    def test_save_load_roundtrip(self, tmp_path):
+        records, forest = _fitted(tmp_path)
+        q = [CostQuery(arch="qwen3-4b", bs=2, seq=32, stage="train")]
+        want = forest.predict_queries(q)
+        for ext in ("npz", "json"):
+            path = str(tmp_path / f"forest.{ext}")
+            forest.save(path)
+            loaded = LMForest.load(path)
+            got = loaded.predict_queries(q)
+            np.testing.assert_allclose(got[0], want[0])
+            np.testing.assert_allclose(got[1], want[1])
+            assert loaded.meta["plan_hash"] == forest.meta["plan_hash"]
+            assert loaded.content_hash() == forest.content_hash()
+
+    def test_feature_drift_detected_on_load(self, tmp_path):
+        records, forest = _fitted(tmp_path)
+        path = str(tmp_path / "forest.json")
+        forest.save(path)
+        blob = json.load(open(path))
+        blob["feature_names"] = blob["feature_names"][:-1]
+        json.dump(blob, open(path, "w"))
+        with pytest.raises(ValueError, match="different feature set"):
+            LMForest.load(path)
+
+    def test_hlo_constants_recovered(self, tmp_path):
+        # synthetic records with KNOWN roofline constants: the NNLS must
+        # invert them (phi = c0 + flops/peak + bytes/bw, no collectives)
+        peak, bw, c0 = 2e9, 5e8, 3e-3
+        rng = np.random.default_rng(0)
+        records = []
+        for i in range(10):
+            fl = float(rng.uniform(1e6, 1e8))
+            hb = float(rng.uniform(1e5, 1e7))
+            records.append({
+                "status": "ok", "device": "host_cpu", "plan_hash": "x",
+                "flops": fl, "hbm_bytes": hb, "collective_bytes": 0.0,
+                "phi_ms": (c0 + fl / peak + hb / bw) * 1e3,
+            })
+        spec = fit_hlo_constants(records)
+        assert spec.calibrated and spec.combine == "sum"
+        assert spec.peak_flops == pytest.approx(peak, rel=1e-4)
+        assert spec.hbm_bw == pytest.approx(bw, rel=1e-4)
+        assert spec.launch_overhead_s == pytest.approx(c0, rel=1e-4)
+        assert spec.meta["phi_mape"] < 1e-6
+
+    def test_register_walks_engine_and_ensemble(self, tmp_path):
+        records, forest = _fitted(tmp_path)
+        fb = ForestBackend()
+        engine = CostEngine(EnsembleBackend([fb, AnalyticalBackend()]))
+        owner = register_lm_forest(engine, forest)
+        assert owner is fb and fb.lm is forest
+        with pytest.raises(ValueError):
+            register_lm_forest(EnsembleBackend([AnalyticalBackend()]), forest)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: zero compiles through the fitted forest
+# ---------------------------------------------------------------------------
+
+
+class TestZeroCompileAdmission:
+    def test_admit_lm_cell_without_compiling(self, tmp_path, monkeypatch):
+        records, forest = _fitted(tmp_path)
+
+        import jax
+
+        import repro.launch.lowering as lowering
+
+        def boom(*a, **k):
+            raise AssertionError("admission path invoked the jax compiler")
+
+        monkeypatch.setattr(jax, "jit", boom)
+        monkeypatch.setattr(lowering, "compile_cell", boom)
+        monkeypatch.setattr(AnalyticalBackend, "_compile_arch", boom)
+
+        engine = CostEngine(EnsembleBackend(
+            [ForestBackend(lm=forest), AnalyticalBackend()]))
+        ok, info = engine.admit(
+            CostQuery(arch="stablelm-1.6b", bs=2, seq=64, stage="train"),
+            gamma_budget_mb=1e6)
+        assert ok and info["source"] == "forest"
+        # batched path, infer stage, and an arch outside the campaign also
+        # answer compile-free (featurization generalizes over the registry)
+        ests = engine.backend.estimate([
+            CostQuery(arch="qwen3-4b", bs=4, seq=32, stage="infer"),
+            CostQuery(arch="internlm2-1.8b", bs=2, seq=16, stage="train"),
+        ])
+        assert all(e.source == "forest" and e.detail.get("lm") for e in ests)
+
+    def test_unfitted_forest_falls_through(self):
+        backend = ForestBackend()  # no CNN predictors, no LM forest
+        assert not backend.supports(
+            CostQuery(arch="qwen3-4b", bs=2, stage="train"))
+
+    def test_cache_salt_tracks_lm_forest(self, tmp_path):
+        records, forest = _fitted(tmp_path)
+        empty = ForestBackend()
+        with_lm = ForestBackend(lm=forest)
+        assert empty.cache_salt() != with_lm.cache_salt()
+
+
+# ---------------------------------------------------------------------------
+# satellite: timed autotuner winners feed the calibration fit
+# ---------------------------------------------------------------------------
+
+
+class TestTimedWinnersCalibration:
+    def _dps(self, peak, bw, n=8, seed=0):
+        from repro.core.dataset import Datapoint
+        from repro.core.features import FEATURE_NAMES
+        from repro.engine.decompose import latency_terms, memory_terms
+
+        rng = np.random.default_rng(seed)
+        dps = []
+        for i in range(n):
+            f = rng.uniform(1e3, 1e6, size=len(FEATURE_NAMES))
+            flops, byts = latency_terms(f, 4)
+            w, a = memory_terms(f, 4)
+            dps.append(Datapoint(
+                family="synthetic", level=0.1 * i, strategy="random", bs=2,
+                width_mult=0.25, input_hw=16, seed=0,
+                gamma_mb=float(5 + w[0] / 1e6 + a[0] / 1e6),
+                phi_ms=float((flops[0] / peak + byts[0] / bw) * 1e3),
+                features=[float(v) for v in f]))
+        return dps
+
+    def _timed_cache(self, tmp_path, measured_us):
+        from repro.kernels.autotune import TuningCache
+        from repro.kernels.flash_attention import tiling
+
+        shape = tiling.shape_key((1, 2, 256, 64), (1, 2, 256, 64),
+                                 causal=True, dtype="bfloat16")
+        cache = TuningCache(str(tmp_path / "tuning.json"))
+        cache.put("k1", {"kernel": "flash_attention", "shape": shape,
+                         "config": tiling.default(shape), "source": "timed",
+                         "measured_us": measured_us})
+        # model-ranked and shape-less entries must be ignored
+        cache.put("k2", {"kernel": "flash_attention", "shape": shape,
+                         "config": tiling.default(shape), "source": "model",
+                         "model_us": 1.0})
+        cache.put("k3", {"kernel": "flash_attention", "source": "timed",
+                         "config": {}, "measured_us": 5.0})
+        return cache
+
+    def test_fit_consumes_timed_rows(self, tmp_path):
+        from repro.engine.calibrate import calibrate, timed_tuning_rows
+
+        cache = self._timed_cache(tmp_path, measured_us=500.0)
+        A, phi = timed_tuning_rows(cache)
+        assert A.shape == (1, 3) and phi.shape == (1,)
+        assert phi[0] == pytest.approx(500e-6)
+
+        dps = self._dps(peak=1e10, bw=1e9)
+        backend = AnalyticalBackend()
+        base = calibrate(backend, None, [], datapoints=dps, apply=False)
+        fed = calibrate(backend, None, [], datapoints=dps,
+                        tuning_cache=cache, apply=False)
+        assert base.meta["n_timed_kernel_rows"] == 0
+        assert fed.meta["n_timed_kernel_rows"] == 1
+        # the kernel row disagrees with the synthetic grid's constants, so
+        # consuming it must move the fit
+        assert fed.peak_flops != pytest.approx(base.peak_flops, rel=1e-6)
+
+    def test_empty_cache_is_noop(self, tmp_path):
+        from repro.engine.calibrate import timed_tuning_rows
+        from repro.kernels.autotune import TuningCache
+
+        A, phi = timed_tuning_rows(TuningCache(str(tmp_path / "t.json")))
+        assert len(phi) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: MoE dispatch autotuning
+# ---------------------------------------------------------------------------
+
+
+class TestMoeDispatchTuning:
+    SHAPE = dict(B=4, S=32, D=128, E=4, K=2, F=128)
+
+    def test_capacity_formula_matches_moe_block(self):
+        from repro.kernels.moe_dispatch.tiling import _capacity
+        from repro.models.layers import moe_capacity
+
+        for tok in (8, 17, 64, 1000):
+            for E, K, f in ((4, 2, 1.25), (8, 1, 1.0), (64, 8, 2.0)):
+                assert _capacity(tok, E, K, f) == moe_capacity(tok, E, K, f)
+
+    def test_default_in_candidates_and_tuned_never_worse(self):
+        from repro.kernels.autotune import KernelTuner
+        from repro.kernels.moe_dispatch import tiling
+
+        shape = tiling.shape_key(**self.SHAPE, capacity_factor=1.25,
+                                 dtype="bfloat16")
+        assert tiling.default(shape) in tiling.candidates(shape)
+        tuner = KernelTuner(device="tpu_v5e", measure=False)
+        entry = tuner.explain("moe_dispatch", shape)
+        assert entry["model_us"] <= entry["default_model_us"] * (1 + 1e-9)
+
+    def test_candidates_never_below_configured_capacity(self):
+        from repro.kernels.moe_dispatch import tiling
+
+        shape = tiling.shape_key(**self.SHAPE, capacity_factor=1.5,
+                                 dtype="bfloat16")
+        assert all(c["capacity_factor"] >= 1.5 - 1e-9
+                   for c in tiling.candidates(shape))
+
+    def test_moe_block_uses_tuned_groups(self, monkeypatch):
+        from repro.models import layers
+
+        seen = {}
+
+        def fake_tuned(kernel, shape, default=None):
+            seen["kernel"] = kernel
+            return {"groups": 2, "capacity_factor": 1.0}  # below configured!
+
+        import repro.kernels.autotune as at
+
+        monkeypatch.setattr(at, "tuned_config", fake_tuned)
+
+        class Cfg:
+            d_model, n_experts, experts_per_token = 128, 4, 2
+            moe_d_ff_, capacity_factor = 128, 1.25
+
+        g, f = layers._tuned_moe_dispatch(4, 32, Cfg, "bfloat16")
+        assert seen["kernel"] == "moe_dispatch"
+        assert g == 2
+        assert f == 1.25  # clamped back up: quality knob never tightened
+
+
+# ---------------------------------------------------------------------------
+# satellite: dryrun --out ledger dedupe
+# ---------------------------------------------------------------------------
+
+
+class TestDryrunLedger:
+    def test_recorded_cells_dedupe_and_tolerate_torn_lines(self, tmp_path):
+        from repro.launch.dryrun import _cell_id, _recorded_cells
+
+        p = str(tmp_path / "dryrun.jsonl")
+        append_jsonl(p, [
+            {"arch": "a", "shape": "s", "mesh": "16x16", "step_s": 1.0},
+            {"arch": "a", "shape": "s", "mesh": "16x16", "step_s": 2.0},  # re-run
+            {"arch": "b", "shape": "s", "mesh": "16x16", "skipped": "why"},
+            {"unrelated": True},
+        ])
+        with open(p, "a") as f:
+            f.write('{"arch": "c", "shape": "torn"')
+        cells = _recorded_cells(p)
+        assert cells == {_cell_id("a", "s", "16x16"), _cell_id("b", "s", "16x16")}
+        assert _recorded_cells(None) == set()
+
+
+# ---------------------------------------------------------------------------
+# the real thing: 4-cell host-CPU grid, compiled and timed (tier-1 smoke)
+# ---------------------------------------------------------------------------
+
+
+class TestCampaignSmoke:
+    def test_four_cell_grid_end_to_end(self, tmp_path):
+        plan = smoke_plan(
+            archs=("qwen3-4b",),
+            shapes=("smoke_train_16x2", "smoke_train_32x2",
+                    "smoke_prefill_32x2", "smoke_prefill_64x2"),
+        )
+        assert len(plan) == 4
+        led = str(tmp_path / "ledger.jsonl")
+        runner = CampaignRunner(plan, led, repeats=1, warmup=1)
+        out = runner.run_campaign()
+        assert out["measured"] == 4 and out["failed"] == 0
+
+        records = runner.ledger.records("ok")
+        for r in records:
+            assert r["phi_ms"] > 0 and r["gamma_mb"] > 0
+            assert r["flops"] > 0 and r["hbm_bytes"] > 0
+            assert r["executed"] and r["n_devices"] == 1
+
+        # resume over the real ledger: nothing recompiles
+        assert CampaignRunner(plan, led).run_campaign()["measured"] == 0
+
+        # fit + one zero-compile admission over the real ground truth
+        forest = fit_lm_forest(records, holdout_frac=0.0, seed=0)
+        engine = CostEngine(ForestBackend(lm=forest))
+        ok, info = engine.admit(
+            CostQuery(arch="qwen3-4b", bs=2, seq=16, stage="train"),
+            gamma_budget_mb=1e5)
+        assert ok and info["source"] == "forest"
+        # in-sample prediction of a measured cell is in the right ballpark
+        r16 = next(r for r in records if r["shape"]["name"] == "smoke_train_16x2")
+        est = engine.estimate_one(
+            CostQuery(arch="qwen3-4b", bs=2, seq=16, stage="train"))
+        assert est.gamma_mb == pytest.approx(r16["gamma_mb"], rel=0.75)
+
+
+# ---------------------------------------------------------------------------
+# CLI (plan/status only — run/fit covered above without subprocess cost)
+# ---------------------------------------------------------------------------
+
+
+class TestCli:
+    def test_plan_run_status_fit(self, tmp_path, capsys, monkeypatch):
+        from repro.campaign import __main__ as cli
+
+        plan_path = str(tmp_path / "plan.json")
+        assert cli.main(["plan", "--smoke", "--subsample", "4",
+                         "--out", plan_path]) == 0
+        plan = load_plan(plan_path)
+
+        led = str(tmp_path / "ledger.jsonl")
+        monkeypatch.setattr(
+            "repro.campaign.runner.measure_cell",
+            lambda cell, **kw: fake_measure(cell))
+        assert cli.main(["run", "--plan", plan_path, "--ledger", led]) == 0
+        assert cli.main(["status", "--plan", plan_path, "--ledger", led]) == 0
+        out_json = capsys.readouterr().out
+        assert '"pending": 0' in out_json
+
+        forest_path = str(tmp_path / "forest.npz")
+        assert cli.main(["fit", "--ledger", led, "--out", forest_path,
+                         "--holdout", "0.25"]) == 0
+        assert os.path.exists(forest_path)
+        assert LMForest.load(forest_path).fitted
