@@ -9,6 +9,12 @@ Runs both benchmarks in-process and enforces:
 * batched/scalar prediction parity is exact,
 * calibrated accuracy on the golden fixture: phi MAPE ≤ 0.25, gamma
   MAPE ≤ 0.10 (the fitted targets are 0.15 / 0.04),
+* cost-ledger parity (docs/engine.md "Cost ledger"): per-op class sums
+  reproduce the HloCost scalars (relative 1e-9; exact at smoke scale), on
+  a compiled golden program and on the campaign records' recorded
+  breakdowns, and the APPLIED class-wise
+  calibration (CNN and campaign HLO fits both) is never worse than the
+  aggregate 3-term fallback,
 * campaign LM-forest accuracy (docs/campaign.md): held-out-cell latency
   MAPE and combined latency+memory MAPE from the campaign-fitted forest
   beat the uncalibrated analytical path on the host-CPU smoke grid,
@@ -31,6 +37,10 @@ ENGINE_SPEEDUP_MIN = 3.0
 PHI_MAPE_MAX = 0.25
 GAMMA_MAPE_MAX = 0.10
 PARITY_TOL = 1e-9   # packed-forest float accumulation order (≈1e-14 observed)
+# Class-grouped vs sequential ledger sums: relative, since addition
+# reordering is only bit-exact below the 2^53 integer ceiling (0 observed
+# at smoke scale).
+LEDGER_PARITY_RTOL = 1e-9
 CAMPAIGN_GAMMA_MAPE_MAX = 0.50  # sanity bound on the LM forest's memory error
 
 
@@ -49,11 +59,22 @@ def main() -> int:
           f"engine batched speedup {eng['speedup']:.1f}x >= {ENGINE_SPEEDUP_MIN}x")
     check(eng["max_dev"] <= PARITY_TOL,
           f"engine batched/scalar parity dev {eng['max_dev']:.3g} <= {PARITY_TOL}")
+    # Cost-ledger contract: per-op class sums reproduce the HloCost scalars
+    # on a compiled golden program.
+    check(eng["ledger_parity_dev"] <= LEDGER_PARITY_RTOL,
+          f"cost-ledger breakdown parity rel dev "
+          f"{eng['ledger_parity_dev']:.3g} <= {LEDGER_PARITY_RTOL}")
     if "phi_mape_cal" in eng:  # golden fixture present
         check(eng["phi_mape_cal"] <= PHI_MAPE_MAX,
               f"calibrated phi MAPE {eng['phi_mape_cal']:.3f} <= {PHI_MAPE_MAX}")
         check(eng["gamma_mape_cal"] <= GAMMA_MAPE_MAX,
               f"calibrated gamma MAPE {eng['gamma_mape_cal']:.3f} <= {GAMMA_MAPE_MAX}")
+        # Class-wise calibration must never be worse than the 3-term
+        # aggregate fit (the aggregate is the tied-coefficient special
+        # case, and calibrate() falls back when the split carries nothing).
+        check(eng["phi_mape_cal"] <= eng["phi_mape_cal_aggregate"] * (1 + 1e-9),
+              f"class-wise phi MAPE {eng['phi_mape_cal']:.3f} <= aggregate "
+              f"{eng['phi_mape_cal_aggregate']:.3f}")
     else:
         print("SKIP calibration accuracy (golden fixture absent)")
 
@@ -76,6 +97,16 @@ def main() -> int:
         check(camp["forest_gamma_mape"] <= CAMPAIGN_GAMMA_MAPE_MAX,
               f"campaign forest gamma MAPE {camp['forest_gamma_mape']:.3f} "
               f"<= {CAMPAIGN_GAMMA_MAPE_MAX}")
+        if "breakdown_parity_dev" in camp:
+            check(camp["breakdown_parity_dev"] <= LEDGER_PARITY_RTOL,
+                  f"campaign ledger breakdown parity rel dev "
+                  f"{camp['breakdown_parity_dev']:.3g} <= {LEDGER_PARITY_RTOL}")
+        if "hlo_phi_mape_applied" in camp:
+            check(camp["hlo_phi_mape_applied"]
+                  <= camp["hlo_phi_mape_aggregate"] * (1 + 1e-9),
+                  f"campaign applied HLO phi MAPE "
+                  f"{camp['hlo_phi_mape_applied']:.3f} <= aggregate "
+                  f"{camp['hlo_phi_mape_aggregate']:.3f}")
     else:
         print("SKIP campaign accuracy (smoke grid too sparse)")
 

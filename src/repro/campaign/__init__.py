@@ -19,12 +19,19 @@ CLI: ``python -m repro.campaign {plan,run,fit,status} ...``
 
 from repro.campaign.fit import (
     LMForest,
+    check_device_fingerprints,
     fit_hlo_constants,
     fit_lm_forest,
     register_lm_forest,
     split_records,
 )
-from repro.campaign.lm_features import LM_FEATURE_NAMES, cell_features
+from repro.campaign.lm_features import (
+    CLASS_FEATURE_NAMES,
+    LM_FEATURE_NAMES,
+    cell_features,
+    class_histogram,
+    ledger_class_features,
+)
 from repro.campaign.plan import (
     SMOKE_SHAPES,
     CampaignCell,
@@ -41,10 +48,14 @@ __all__ = [
     "CampaignLedger",
     "CampaignPlan",
     "CampaignRunner",
+    "CLASS_FEATURE_NAMES",
     "LMForest",
     "LM_FEATURE_NAMES",
     "SMOKE_SHAPES",
     "cell_features",
+    "check_device_fingerprints",
+    "class_histogram",
+    "ledger_class_features",
     "fit_hlo_constants",
     "fit_lm_forest",
     "load_plan",

@@ -67,7 +67,8 @@ def _cmd_fit(args) -> int:
     ledger = CampaignLedger(args.ledger)
     records = ledger.records()
     forest = fit_lm_forest(records, device=args.device,
-                           holdout_frac=args.holdout, seed=args.seed)
+                           holdout_frac=args.holdout, seed=args.seed,
+                           allow_mixed=args.allow_mixed)
     forest.save(args.out)
     print(f"LM forest -> {args.out}")
     print(json.dumps({k: v for k, v in forest.meta.items()
@@ -75,11 +76,38 @@ def _cmd_fit(args) -> int:
     if args.hlo_device_out:
         from repro.engine.devices import save_device_spec
 
-        spec = fit_hlo_constants(records, base_device=args.device)
+        spec = fit_hlo_constants(records, base_device=args.device,
+                                 allow_mixed=args.allow_mixed)
         save_device_spec(args.hlo_device_out, spec)
         print(f"calibrated LM DeviceSpec ({spec.name}, "
+              f"{spec.meta['latency_fit']} fit, "
               f"phi MAPE {spec.meta['phi_mape']:.3f}) -> {args.hlo_device_out}")
     return 0
+
+
+def _breakdown(records: list[dict]) -> dict:
+    """Aggregate the per-op-class ledger breakdown across ok-records: the
+    'which op class is the money going to' view of a campaign.  The merge
+    itself is ``CostLedger.merge_class_sums`` — one definition of a class
+    bucket, shared with the ledger."""
+    from repro.costmodel import CostLedger
+
+    with_classes = [r["cost_classes"] for r in records
+                    if r.get("cost_classes")]
+    totals = CostLedger.merge_class_sums(with_classes)
+    flops_tot = sum(t["flops"] for t in totals.values()) or 1.0
+    hbm_tot = sum(t["hbm_bytes"] for t in totals.values()) or 1.0
+    return {
+        "records_with_breakdown": len(with_classes),
+        "classes": {
+            cls: {
+                **t,
+                "flops_share": round(t["flops"] / flops_tot, 4),
+                "hbm_share": round(t["hbm_bytes"] / hbm_tot, 4),
+            }
+            for cls, t in totals.items()
+        },
+    }
 
 
 def _cmd_status(args) -> int:
@@ -97,6 +125,8 @@ def _cmd_status(args) -> int:
             pending=len(keys - ledger.ok_keys - ledger.failed_keys),
             foreign_records=len(set(ledger._by_key) - keys),
         )
+    if args.breakdown:
+        out["breakdown"] = _breakdown(ledger.records("ok"))
     print(json.dumps(out, indent=2))
     return 0
 
@@ -150,11 +180,18 @@ def main(argv=None) -> int:
     p.add_argument("--hlo-device-out", default=None,
                    help="also NNLS-fit parse_hlo_cost constants into a "
                         "calibrated DeviceSpec at this path")
+    p.add_argument("--allow-mixed", action="store_true",
+                   help="fit even when records were measured under different "
+                        "device constants than the fit would featurize with "
+                        "(the per-record fingerprint guard)")
     p.set_defaults(fn=_cmd_fit)
 
     p = sub.add_parser("status", help="ledger/plan progress")
     p.add_argument("--ledger", required=True)
     p.add_argument("--plan", default=None)
+    p.add_argument("--breakdown", action="store_true",
+                   help="also print the per-op-class cost breakdown "
+                        "aggregated over ok records")
     p.set_defaults(fn=_cmd_status)
 
     args = ap.parse_args(argv)

@@ -37,12 +37,17 @@ from repro.campaign.plan import mesh_dims
 from repro.core.fileio import atomic_write_bytes, atomic_write_json
 from repro.core.predictor import HybridRegressor, mape
 from repro.engine.calibrate import nnls
-from repro.engine.decompose import lm_roofline_terms
+from repro.engine.decompose import (
+    classwise_seconds,
+    ledger_latency_columns,
+    lm_roofline_terms,
+)
 from repro.engine.devices import DeviceSpec, resolve_device
 
 __all__ = [
     "LMForest",
     "split_records",
+    "check_device_fingerprints",
     "fit_lm_forest",
     "fit_hlo_constants",
     "register_lm_forest",
@@ -164,6 +169,50 @@ def _ok_records(records) -> list[dict]:
     return recs
 
 
+def check_device_fingerprints(records, *, device=None,
+                              allow_mixed: bool = False) -> dict:
+    """Refuse to fit a ledger whose records were measured under different
+    device constants than the spec that will featurize them (ROADMAP "per-
+    record device fingerprints checked at fit time").
+
+    Each v2+ record carries the ``DeviceSpec.fingerprint()`` it was
+    measured under; if the spec resolving for that record NOW (the
+    ``device`` override, else the record's own device name) hashes
+    differently — a recalibration, an edited persisted spec, a
+    ``--device`` re-featurization — the ledger's device-scaled features
+    would silently disagree with the recorded ground truth.  Raises
+    ``ValueError`` listing the mismatches unless ``allow_mixed`` (CLI
+    ``--allow-mixed``) opts in; pre-fingerprint records pass (nothing to
+    check).  Returns ``{checked, unstamped, mismatched}`` counts."""
+    mismatched: list[str] = []
+    checked = unstamped = 0
+    fp_cache: dict[str, str] = {}
+    for r in records:
+        stamped = r.get("device_fingerprint")
+        if not stamped:
+            unstamped += 1
+            continue
+        checked += 1
+        name = r.get("device", "host_cpu") if device is None else device
+        key = name if isinstance(name, str) else repr(name)
+        if key not in fp_cache:
+            fp_cache[key] = resolve_device(name).fingerprint()
+        if stamped != fp_cache[key]:
+            mismatched.append(
+                f"{r.get('arch')}×{r.get('shape', {}).get('name')} "
+                f"[{r.get('device', 'host_cpu')}]: measured under "
+                f"{stamped}, would featurize under {fp_cache[key]}")
+    if mismatched and not allow_mixed:
+        shown = "; ".join(mismatched[:3])
+        raise ValueError(
+            f"{len(mismatched)}/{checked} ledger records were measured under "
+            f"different device constants than the fit would use ({shown}"
+            f"{' …' if len(mismatched) > 3 else ''}); re-run the campaign or "
+            "pass allow_mixed=True / --allow-mixed to fit anyway")
+    return {"checked": checked, "unstamped": unstamped,
+            "mismatched": len(mismatched)}
+
+
 def split_records(records, *, holdout_frac: float = 0.25, seed: int = 0
                   ) -> tuple[list[dict], list[dict]]:
     """Deterministic train/holdout split of ok-records, stratified nowhere —
@@ -189,6 +238,7 @@ def fit_lm_forest(
     holdout_frac: float = 0.25,
     seed: int = 0,
     n_estimators: int = 60,
+    allow_mixed: bool = False,
 ) -> LMForest:
     """Grow the (Γ, Φ) forests from ledger records.
 
@@ -201,7 +251,11 @@ def fit_lm_forest(
     recorded device — the fleet case: a multi-device campaign keeps every
     row's constants truthful, and the forest learns the device dimension.
     Pass a device only to deliberately re-featurize one campaign under
-    another spec (e.g. a freshly calibrated one)."""
+    another spec (e.g. a freshly calibrated one) — that trips the
+    fingerprint guard (:func:`check_device_fingerprints`) and therefore
+    needs ``allow_mixed=True``."""
+    fp_check = check_device_fingerprints(_ok_records(records), device=device,
+                                         allow_mixed=allow_mixed)
     train, heldout = split_records(records, holdout_frac=holdout_frac,
                                    seed=seed)
     # Query-time default coordinates: the explicit override, else the
@@ -229,6 +283,7 @@ def fit_lm_forest(
         "device_fingerprint": dev.fingerprint(),
         "mesh_dims": list(mesh_dims(train[0].get("mesh", "1x1"))),
         "reduced": bool(train[0].get("reduced", True)),
+        "fingerprint_check": fp_check,
         "oob_gamma_mape": forest.gamma_model.oob_mape_,
         "oob_phi_mape": forest.phi_model.oob_mape_,
     }
@@ -247,18 +302,42 @@ def fit_hlo_constants(
     *,
     base_device: "DeviceSpec | str | None" = None,
     name: str | None = None,
+    per_class: bool = True,
+    allow_mixed: bool = False,
 ) -> DeviceSpec:
     """NNLS-fit the ``parse_hlo_cost`` roofline constants from the ledger.
 
-    Solves  phi_s = c0 + c1·flops + c2·hbm_bytes + c3·collective_bytes
-    with c ≥ 0 over the executed cells, then inverts the coefficients into
-    the DeviceSpec denominators (``lm_roofline_terms`` divides by exactly
-    these) — the same Lawson–Hanson machinery as the CNN calibration
-    (``engine/calibrate.nnls``), applied to the LM/HLO decomposition."""
+    The aggregate system — always solved, its constants landing in the
+    classic DeviceSpec fields — is
+
+        phi_s = c0 + c1·flops + c2·hbm_bytes + c3·collective_bytes
+
+    with c ≥ 0 over the executed cells, coefficients inverted into the
+    DeviceSpec denominators (``lm_roofline_terms`` divides by exactly
+    these).  With ``per_class=True`` (default) and records carrying the
+    v2 ``cost_classes`` breakdown, a refined system with one coefficient
+    per ``decompose.LM_LATENCY_COLUMNS`` column (matmul vs elementwise vs
+    collective …) is solved over the SAME cells; if its MAPE is no worse
+    it lands in ``DeviceSpec.class_coeffs["lm_latency"]`` and the
+    analytical backend prices ledgers class-wise.  The aggregate fit stays
+    the documented fallback either way — ``meta`` records both MAPEs."""
     recs = [r for r in _ok_records(records) if r.get("phi_ms", 0) > 0]
     if len(recs) < 4:
         raise ValueError(f"need >= 4 executed cells to fit 4 constants, "
                          f"have {len(recs)}")
+    check_device_fingerprints(recs, device=base_device,
+                              allow_mixed=allow_mixed)
+    # One NNLS system fits ONE device's constants.  A fleet ledger (the
+    # forest's multi-device case) must be filtered per device first —
+    # blending millisecond host rows with microsecond TPU rows would
+    # 'calibrate' constants describing neither, with every per-record
+    # fingerprint happily matching its own device.
+    devices = {r.get("device", "host_cpu") for r in recs}
+    if len(devices) > 1 and not allow_mixed:
+        raise ValueError(
+            f"fit_hlo_constants solves one device's constants but the "
+            f"ledger spans {sorted(devices)}; filter records to a single "
+            f"device or pass allow_mixed=True / --allow-mixed")
     base = resolve_device(base_device if base_device is not None
                           else recs[0].get("device", "host_cpu"))
     flops = np.array([r["flops"] for r in recs], dtype=np.float64)
@@ -268,6 +347,28 @@ def fit_hlo_constants(
 
     A = np.stack([np.ones_like(phi_s), flops, hbm, coll], axis=1)
     c = nnls(A, phi_s)
+    phi_mape_agg = float(mape(A @ c, phi_s))
+
+    # Class-wise refinement over the recorded ledger breakdowns.  Cells
+    # without a breakdown (pre-v2 records) disable it — a partially
+    # attributed system would bias the classes toward whichever cells
+    # happened to carry one.
+    class_coeffs: dict = {}
+    phi_mape_cls = None
+    if per_class and all(r.get("cost_classes") for r in recs):
+        cols = ledger_latency_columns([r["cost_classes"] for r in recs])
+        names = [n for n, v in cols.items() if np.any(v)]
+        if names:
+            A_cls = np.stack([np.ones_like(phi_s)] + [cols[n] for n in names],
+                             axis=1)
+            c_cls = nnls(A_cls, phi_s)
+            phi_mape_cls = float(mape(A_cls @ c_cls, phi_s))
+            if phi_mape_cls <= phi_mape_agg:
+                class_coeffs["lm_latency"] = {
+                    "_intercept": float(c_cls[0]),
+                    **{n: float(v) for n, v in zip(names, c_cls[1:])},
+                }
+
     # Inert (never-binding) terms keep a finite, serializable denominator.
     spec = replace(
         base,
@@ -278,17 +379,27 @@ def fit_hlo_constants(
         launch_overhead_s=float(c[0]),
         combine="sum",
         calibrated=True,
+        class_coeffs={**{k: v for k, v in base.class_coeffs.items()
+                         if k != "lm_latency"}, **class_coeffs},
         meta={
             "base_device": base.name,
             "n_cells": len(recs),
             "plan_hash": recs[0].get("plan_hash"),
-            "phi_mape": float(mape(A @ c, phi_s)),
+            "phi_mape": (phi_mape_cls if class_coeffs else phi_mape_agg),
+            "phi_mape_aggregate": phi_mape_agg,
+            "phi_mape_classwise": phi_mape_cls,
+            "latency_fit": "classwise" if class_coeffs else "aggregate",
             "fit": "campaign_hlo_nnls",
         },
     )
-    # Self-check through the shared terms: predictions must reproduce A @ c.
+    # Self-check through the shared terms: predictions must reproduce the
+    # fitted systems exactly (aggregate via lm_roofline_terms, class-wise
+    # via the shared classwise_seconds pricing).
     t = lm_roofline_terms(flops, hbm, coll, spec)
     assert np.allclose(spec.launch_overhead_s + sum(t), A @ c, rtol=1e-6)
+    if class_coeffs:
+        pred = classwise_seconds(cols, spec.class_coeffs["lm_latency"])
+        assert np.allclose(pred, A_cls @ c_cls, rtol=1e-6)
     return spec
 
 

@@ -26,17 +26,59 @@ import numpy as np
 from repro.configs.base import ArchConfig, ShapeSpec, mesh_split
 from repro.configs.registry import get_config
 from repro.core.roofline import model_flops_for_cell
+from repro.costmodel import OP_CLASSES
 from repro.engine.decompose import lm_roofline_terms
 from repro.engine.devices import DeviceSpec, resolve_device
 
 __all__ = [
     "LM_FEATURE_NAMES",
+    "CLASS_FEATURE_NAMES",
+    "class_histogram",
+    "ledger_class_features",
     "cell_features",
     "feature_matrix",
     "query_cell",
 ]
 
 _BYTES_PER_EL = {"bfloat16": 2, "float16": 2, "float32": 4}
+
+# Per-op-class histogram features (the cost-ledger taxonomy): what share
+# of a cell's compute and traffic each class carries.  ONE histogram
+# function (:func:`class_histogram`) serves two providers — the analytic
+# class decomposition below (query time: compile-free, the serving
+# contract) and the measured ``cost_classes`` a v2 campaign record stores
+# (:func:`ledger_class_features`, for fit-time diagnostics and breakdown
+# reporting) — so the two can never disagree about what a feature means.
+CLASS_FEATURE_NAMES: tuple[str, ...] = tuple(
+    [f"flops_frac_{cls}" for cls in OP_CLASSES]
+    + [f"hbm_frac_{cls}" for cls in OP_CLASSES]
+)
+
+
+def class_histogram(class_sums: dict) -> np.ndarray:
+    """(``CLASS_FEATURE_NAMES`` order) normalized per-class shares of a
+    ``CostLedger.class_sums()``-shaped dict.  All-zero totals yield zero
+    fractions (a compile-only or analytic cell with no traffic modeled)."""
+    flops_tot = sum(s.get("flops", 0.0) for s in class_sums.values())
+    hbm_tot = sum(s.get("hbm_bytes", 0.0) for s in class_sums.values())
+    vals = [
+        (class_sums.get(cls, {}).get("flops", 0.0) / flops_tot)
+        if flops_tot else 0.0
+        for cls in OP_CLASSES
+    ] + [
+        (class_sums.get(cls, {}).get("hbm_bytes", 0.0) / hbm_tot)
+        if hbm_tot else 0.0
+        for cls in OP_CLASSES
+    ]
+    return np.asarray(vals, dtype=np.float64)
+
+
+def ledger_class_features(record: dict) -> np.ndarray:
+    """The measured-ledger histogram of one campaign record (empty/missing
+    ``cost_classes`` → all zeros) — diagnostics and breakdown reporting,
+    NOT the forest's serving features (those stay analytic so a query
+    needs no measurement)."""
+    return class_histogram(record.get("cost_classes") or {})
 
 LM_FEATURE_NAMES: tuple[str, ...] = (
     # --- architecture ---
@@ -58,7 +100,35 @@ LM_FEATURE_NAMES: tuple[str, ...] = (
     # --- raw device constants (fleet transfer) ---
     "log_peak_flops", "log_hbm_bw", "log_ici_bw", "launch_overhead_ms",
     "device_calibrated",
-)
+    # --- per-op-class histogram (cost-ledger taxonomy, analytic provider) ---
+) + CLASS_FEATURE_NAMES
+
+
+def analytic_class_sums(
+    model_flops_dev: float,
+    param_bytes_dev: float,
+    act_bytes_dev: float,
+    kv_bytes_dev: float,
+    opt_bytes_dev: float,
+    coll_bytes_dev: float,
+) -> dict:
+    """Compile-free per-class decomposition of a cell, in the
+    ``CostLedger.class_sums()`` shape: model FLOPs are matmul-class work
+    streaming the weights, activations/optimizer state are elementwise
+    traffic, KV-cache movement is data movement, collectives are
+    collectives.  Deliberately coarse — the forest corrects it; its job is
+    carrying the right *shares* across architectures."""
+    return {
+        "matmul": {"flops": model_flops_dev, "hbm_bytes": param_bytes_dev,
+                   "collective_bytes": 0.0},
+        "elementwise": {"flops": 0.0,
+                        "hbm_bytes": act_bytes_dev + opt_bytes_dev,
+                        "collective_bytes": 0.0},
+        "data_movement": {"flops": 0.0, "hbm_bytes": kv_bytes_dev,
+                          "collective_bytes": 0.0},
+        "collective": {"flops": 0.0, "hbm_bytes": 0.0,
+                       "collective_bytes": coll_bytes_dev},
+    }
 
 
 def cell_features(
@@ -122,7 +192,10 @@ def cell_features(
         math.log10(device.ici_bw), device.launch_overhead_s * 1e3,
         float(device.calibrated),
     )
-    x = np.asarray(vals, dtype=np.float64)
+    hist = class_histogram(analytic_class_sums(
+        model_flops_dev, param_bytes_dev, act_bytes_dev, kv_bytes_dev,
+        opt_bytes_dev, coll_bytes_dev))
+    x = np.concatenate([np.asarray(vals, dtype=np.float64), hist])
     assert x.shape == (len(LM_FEATURE_NAMES),)
     return x
 
@@ -144,16 +217,31 @@ def feature_matrix(
     records: list[dict],
     *,
     device: "DeviceSpec | str | None" = None,
+    classes_from: str = "analytic",
 ) -> np.ndarray:
     """(N, F) matrix from campaign ledger records (see ``runner.py`` for the
     schema).  ``device`` overrides the per-record device name — used to
-    re-featurize one campaign under another device's constants."""
+    re-featurize one campaign under another device's constants.
+
+    ``classes_from`` picks the provider of the per-class histogram block:
+    ``"analytic"`` (default — what a bare query can also compute, the
+    serving contract) or ``"ledger"`` (each record's measured
+    ``cost_classes`` breakdown, for fit-time diagnostics and feature-
+    importance studies; records without one keep the analytic row)."""
+    if classes_from not in ("analytic", "ledger"):
+        raise ValueError(f"classes_from must be 'analytic' or 'ledger', "
+                         f"got {classes_from!r}")
     from repro.campaign.plan import CampaignCell, mesh_dims
 
+    n_cls = len(CLASS_FEATURE_NAMES)
     rows = []
     for rec in records:
         cell = CampaignCell.from_dict(rec)
         cfg = get_config(cell.arch, reduced=cell.reduced)
         dev = resolve_device(device if device is not None else cell.device)
-        rows.append(cell_features(cfg, cell.shape, mesh_dims(cell.mesh), dev))
+        row = cell_features(cfg, cell.shape, mesh_dims(cell.mesh), dev)
+        if classes_from == "ledger" and rec.get("cost_classes"):
+            row = row.copy()
+            row[-n_cls:] = ledger_class_features(rec)
+        rows.append(row)
     return np.stack(rows) if rows else np.zeros((0, len(LM_FEATURE_NAMES)))

@@ -40,7 +40,9 @@ from repro.core.fileio import append_jsonl, load_jsonl_tolerant
 
 __all__ = ["CampaignLedger", "CampaignRunner", "measure_cell"]
 
-LEDGER_SCHEMA_VERSION = 1
+# v2: records carry ``cost_classes`` (the per-op-class ledger breakdown)
+# and ``device_fingerprint`` (checked at fit time — campaign/fit.py).
+LEDGER_SCHEMA_VERSION = 2
 
 
 class CampaignLedger:
@@ -114,6 +116,7 @@ def measure_cell(
     from repro.configs.registry import get_config
     from repro.core.hlo_cost import parse_hlo_cost
     from repro.core.profiler import memory_analysis_bytes
+    from repro.engine.devices import resolve_device
     from repro.launch.lowering import compile_cell
     from repro.launch.mesh import make_mesh
 
@@ -152,6 +155,12 @@ def measure_cell(
         "flops": cost.flops,
         "hbm_bytes": cost.hbm_bytes,
         "collective_bytes": cost.collective_bytes,
+        # Per-op-class ledger breakdown (sums reproduce the three scalars
+        # above exactly — the costmodel parity contract) + the fingerprint
+        # of the device constants this cell was measured under, checked at
+        # fit time against the spec that will featurize it.
+        "cost_classes": cost.ledger.class_sums(),
+        "device_fingerprint": resolve_device(cell.device).fingerprint(),
         "temp_mb": mb["temp"] / 1e6,
         "arg_mb": mb["arg"] / 1e6,
         "n_devices": int(mesh.devices.size),

@@ -19,12 +19,23 @@ This module parses the optimized HLO, builds the computation call graph
 
 Trip counts come from the loop-condition pattern emitted by ``lax.scan``
 (compare(get-tuple-element(param), constant(N)) direction=LT).
+
+Since the per-op cost ledger refactor, the parse's primary output is a
+:class:`repro.costmodel.CostLedger` — one :class:`~repro.costmodel.OpCost`
+record per scheduled instruction, classified through the shared op-class
+taxonomy — and the three :class:`HloCost` scalars are *derived* from it by
+plain left-to-right summation.  There is exactly one accumulation path, so
+``sum(ledger) == aggregates`` holds bit-identically by construction (the
+parity contract ``tests/test_costmodel.py`` asserts on the golden
+fixtures).
 """
 
 from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
+
+from repro.costmodel import CostLedger, OpCost, classify_op
 
 __all__ = ["HloCost", "parse_hlo_cost"]
 
@@ -76,12 +87,23 @@ class _Comp:
 
 @dataclass
 class HloCost:
+    """Aggregate view over a parsed module's :class:`CostLedger`.
+
+    ``flops``/``hbm_bytes``/``collective_bytes`` are left-to-right sums of
+    ``ledger`` — byte-identical to the pre-ledger accumulation on the
+    golden fixtures (the parity contract)."""
+
     flops: float = 0.0
     hbm_bytes: float = 0.0
     collective_bytes: float = 0.0
     bytes_by_kind: dict = field(default_factory=dict)
     count_by_kind: dict = field(default_factory=dict)
     trip_counts: dict = field(default_factory=dict)
+    ledger: CostLedger = field(default_factory=CostLedger)
+
+    def by_class(self) -> dict:
+        """Per-op-class sums (``repro.costmodel`` taxonomy)."""
+        return self.ledger.class_sums()
 
 
 def _shape_bytes(dtype: str, dims: str) -> float:
@@ -302,6 +324,21 @@ def parse_hlo_cost(text: str) -> HloCost:
     _SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
                    "bitcast", "after-all", "partition-id", "replica-id"}
 
+    def _dtype(ins: _Instr) -> str:
+        return ins.dtypes_dims[0][0] if ins.dtypes_dims else ""
+
+    def record(ins: _Instr, comp_name: str, mult: float, *,
+               flops: float = 0.0, hbm: float = 0.0, coll: float = 0.0,
+               dot_flops: float = 0.0, conv_flops: float = 0.0) -> None:
+        cost.ledger.append(OpCost(
+            op=ins.opcode,
+            op_class=classify_op(ins.opcode, dot_flops=dot_flops,
+                                 conv_flops=conv_flops),
+            dtype=_dtype(ins),
+            flops=flops, hbm_bytes=hbm, collective_bytes=coll,
+            trip_multiplier=mult, origin=comp_name,
+        ))
+
     def walk(comp_name: str, mult: float, seen: tuple = ()):  # noqa: C901
         comp = comps.get(comp_name)
         if comp is None or comp_name in seen:
@@ -324,46 +361,65 @@ def parse_hlo_cost(text: str) -> HloCost:
             if oc in ("fusion", "call", "custom-call", "map", "reduce",
                       "reduce-window", "sort", "scatter", "select-and-scatter",
                       "conditional"):
-                # count dots inside the called computation(s) for flops
+                # count dots inside the called computation(s) for flops —
+                # the wrapper record carries them, classified as the work
+                # it feeds (a fused matmul's bytes are matmul-class bytes)
+                dot_f = conv_f = 0.0
                 cm = _CALLS_RE.search(ins.raw)
                 if cm and cm.group(1) in comps:
-                    _flops_only(comps[cm.group(1)], mult, seen + (comp_name,))
-                if oc != "conditional":
-                    cost.hbm_bytes += op_bytes(ins, comp) * mult
+                    dot_f, conv_f = _flops_only(
+                        comps[cm.group(1)], mult, seen + (comp_name,))
+                hbm = op_bytes(ins, comp) * mult if oc != "conditional" else 0.0
+                record(ins, comp_name, mult, flops=dot_f + conv_f, hbm=hbm,
+                       dot_flops=dot_f, conv_flops=conv_f)
                 continue
             base = oc.replace("-start", "")
             if base in COLLECTIVES:
                 b = _collective_bytes(ins) * mult
-                cost.collective_bytes += b
                 cost.bytes_by_kind[base] = cost.bytes_by_kind.get(base, 0.0) + b
                 cost.count_by_kind[base] = cost.count_by_kind.get(base, 0) + 1
-                cost.hbm_bytes += op_bytes(ins, comp) * mult
+                record(ins, comp_name, mult, coll=b,
+                       hbm=op_bytes(ins, comp) * mult)
                 continue
             if oc == "dot":
-                cost.flops += _dot_flops(ins, comp, comps) * mult
-                cost.hbm_bytes += op_bytes(ins, comp) * mult
+                record(ins, comp_name, mult,
+                       flops=_dot_flops(ins, comp, comps) * mult,
+                       hbm=op_bytes(ins, comp) * mult)
                 continue
             if oc == "convolution":
-                cost.flops += _conv_flops(ins) * mult
-                cost.hbm_bytes += op_bytes(ins, comp) * mult
+                record(ins, comp_name, mult, flops=_conv_flops(ins) * mult,
+                       hbm=op_bytes(ins, comp) * mult)
                 continue
             if oc in _SKIP_BYTES or not oc:
                 continue
-            cost.hbm_bytes += op_bytes(ins, comp) * mult
+            record(ins, comp_name, mult, hbm=op_bytes(ins, comp) * mult)
 
-    def _flops_only(comp: _Comp, mult: float, seen: tuple):
+    def _flops_only(comp: _Comp, mult: float, seen: tuple
+                    ) -> tuple[float, float]:
+        """(dot_flops, conv_flops) of every contraction reachable from
+        ``comp``, each already × ``mult`` — accumulated in schedule order."""
         if comp.name in seen:
-            return
+            return 0.0, 0.0
+        dot_f = conv_f = 0.0
         for name in comp.order:
             ins = comp.instrs[name]
             if ins.opcode == "dot":
-                cost.flops += _dot_flops(ins, comp, comps) * mult
+                dot_f += _dot_flops(ins, comp, comps) * mult
             elif ins.opcode == "convolution":
-                cost.flops += _conv_flops(ins) * mult
+                conv_f += _conv_flops(ins) * mult
             elif ins.opcode in ("fusion", "call"):
                 cm = _CALLS_RE.search(ins.raw)
                 if cm and cm.group(1) in comps:
-                    _flops_only(comps[cm.group(1)], mult, seen + (comp.name,))
+                    d, c = _flops_only(comps[cm.group(1)], mult,
+                                       seen + (comp.name,))
+                    dot_f += d
+                    conv_f += c
+        return dot_f, conv_f
 
     walk(entry, 1.0)
+    # The scalars ARE the ledger sums — one accumulation path, so the
+    # parity contract cannot drift.
+    cost.flops = cost.ledger.flops
+    cost.hbm_bytes = cost.ledger.hbm_bytes
+    cost.collective_bytes = cost.ledger.collective_bytes
     return cost

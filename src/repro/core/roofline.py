@@ -19,6 +19,7 @@ MODEL_FLOPS / HLO_FLOPs — low values flag remat/dispatch overcompute.
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass
+from dataclasses import field as dataclasses_field
 
 from repro.core.hlo_cost import parse_hlo_cost
 from repro.launch.mesh import TPU_V5E
@@ -50,18 +51,35 @@ class RooflineReport:
     per_device_hbm_gb: float
     fits_hbm: bool
     compile_s: float = 0.0
+    # per-op-class attribution (repro.costmodel taxonomy): {cls: {flops,
+    # hbm_bytes, collective_bytes, count}} + the top ledger records
+    class_breakdown: dict = dataclasses_field(default_factory=dict)
+    top_ops: list = dataclasses_field(default_factory=list)
 
     def to_dict(self) -> dict:
         return asdict(self)
 
     def summary(self) -> str:
-        return (
+        lines = [
             f"{self.arch:>24s} {self.shape:<12s} {self.mesh:<9s} "
             f"C={self.compute_s * 1e3:9.2f}ms M={self.memory_s * 1e3:9.2f}ms "
             f"X={self.collective_s * 1e3:9.2f}ms dom={self.dominant:<10s} "
             f"useful={self.useful_ratio:5.2f} hbm={self.per_device_hbm_gb:6.2f}GB"
             f"{'' if self.fits_hbm else ' OVER'} [compile {self.compile_s:.0f}s]"
-        )
+        ]
+        if self.class_breakdown:
+            parts = []
+            for cls, s in self.class_breakdown.items():
+                share = s["hbm_bytes"] / self.hbm_bytes if self.hbm_bytes else 0.0
+                parts.append(f"{cls}={share:.0%}")
+            lines.append(" " * 25 + "bytes by class: " + " ".join(parts))
+        for op in self.top_ops:
+            share = op["hbm_bytes"] / self.hbm_bytes if self.hbm_bytes else 0.0
+            lines.append(
+                " " * 25 + f"top op {op['op']:<20s} [{op['op_class']}] "
+                f"{op['hbm_bytes'] / 1e6:10.1f}MB ({share:.0%}) "
+                f"x{op['trip_multiplier']:.0f} @{op['origin']}")
+        return "\n".join(lines)
 
 
 def _cost(compiled) -> dict:
@@ -111,6 +129,12 @@ def roofline_from_compiled(
 
     model_flops_dev = model_flops_total / n_devices
     hbm_plan = memory_bytes(compiled)
+    top_ops = [
+        {"op": r.op, "op_class": r.op_class, "flops": r.flops,
+         "hbm_bytes": r.hbm_bytes, "collective_bytes": r.collective_bytes,
+         "trip_multiplier": r.trip_multiplier, "origin": r.origin}
+        for r in cost.ledger.top_k(3, by="hbm_bytes")
+    ]
     return RooflineReport(
         arch=arch,
         shape=shape,
@@ -130,6 +154,8 @@ def roofline_from_compiled(
         per_device_hbm_gb=hbm_plan / 1e9,
         fits_hbm=hbm_plan <= hw["hbm_bytes"],
         compile_s=compile_s,
+        class_breakdown=cost.ledger.class_sums(),
+        top_ops=top_ops,
     )
 
 

@@ -1,0 +1,5 @@
+"""Per-op cost IR shared by every cost producer and consumer (see ledger.py)."""
+
+from repro.costmodel.ledger import OP_CLASSES, CostLedger, OpCost, classify_op
+
+__all__ = ["OP_CLASSES", "CostLedger", "OpCost", "classify_op"]

@@ -1,0 +1,309 @@
+"""The per-op cost IR: one record schema from HLO parse to autotuner rank.
+
+perf4sight's defining move is modelling training cost from a *per-layer
+decomposition* of the network (paper §5.2); this module is that idea
+applied to our own pipeline.  Every cost producer — the trip-count-aware
+HLO parse (``core/hlo_cost``), the kernel tiling models
+(``kernels/autotune.KernelCost`` is a thin view over :class:`OpCost`) —
+emits the same record, and every consumer — calibration NNLS columns,
+campaign features, roofline breakdowns, tuner ranking — reads it, so a
+blown prediction can finally be attributed to an op class instead of
+disappearing into three whole-step aggregates.
+
+Contracts:
+
+* **Parity** — summing a ledger's records left-to-right reproduces the
+  legacy ``HloCost`` aggregates exactly (``CostLedger.flops`` et al. ARE
+  how ``parse_hlo_cost`` computes its scalars; tests assert the sums are
+  bit-identical on the golden HLO fixtures).  Record ``flops``/``bytes``
+  are *effective* totals — the trip multiplier is already applied — with
+  ``trip_multiplier`` kept alongside for attribution.
+* **Taxonomy** — :data:`OP_CLASSES` is the closed op-class vocabulary;
+  :func:`classify_op` is the single mapping from an HLO opcode (plus any
+  fused-in flops) to a class.  Calibration columns, campaign histogram
+  features and the breakdown CLI all iterate this tuple, in this order.
+* **Persistence** — NPZ (packed columns) or JSON (inspectable), chosen by
+  extension, written atomically via ``core/fileio``.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field, replace
+
+__all__ = [
+    "OP_CLASSES",
+    "OpCost",
+    "CostLedger",
+    "classify_op",
+]
+
+# Closed vocabulary, most-structured first.  "matmul" and "conv" carry the
+# MXU/FMA work; "collective" the inter-device traffic; "reduction" the
+# tree-shaped ops; "data_movement" pure layout/copy traffic; "elementwise"
+# the fused pointwise bulk (XLA loop fusions land here); "other" anything
+# opaque (custom calls).
+OP_CLASSES: tuple[str, ...] = (
+    "matmul", "conv", "collective", "reduction", "data_movement",
+    "elementwise", "other",
+)
+
+_COLLECTIVE_OPS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+_REDUCTION_OPS = {"reduce", "reduce-window", "sort", "select-and-scatter"}
+_DATA_MOVEMENT_OPS = {
+    "copy", "copy-start", "copy-done", "transpose", "broadcast", "reshape",
+    "slice", "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "concatenate", "pad", "reverse", "iota",
+}
+_OPAQUE_OPS = {"custom-call", "infeed", "outfeed", "rng", "rng-bit-generator"}
+
+
+def classify_op(opcode: str, *, dot_flops: float = 0.0,
+                conv_flops: float = 0.0) -> str:
+    """Map an HLO opcode to its :data:`OP_CLASSES` entry.
+
+    ``dot_flops``/``conv_flops`` let a wrapper instruction (fusion, call)
+    that *contains* contraction work classify as the work it feeds: a
+    fused matmul's HBM traffic belongs to the matmul class, not to
+    "whatever a fusion is".
+
+    Both async halves classify together: ``all-reduce-start`` and
+    ``all-reduce-done`` are collective-class (the ring-model collective
+    *bytes* are still counted once, on the start — only the done op's HBM
+    traffic attribution is at stake here).
+    """
+    base = opcode.replace("-start", "").replace("-done", "")
+    if base in _COLLECTIVE_OPS:
+        return "collective"
+    if base == "dot" or (dot_flops > 0 and dot_flops >= conv_flops):
+        return "matmul"
+    if base == "convolution" or conv_flops > 0:
+        return "conv"
+    if base in _REDUCTION_OPS:
+        return "reduction"
+    if base in _DATA_MOVEMENT_OPS:
+        return "data_movement"
+    if base in _OPAQUE_OPS or not base:
+        return "other"
+    return "elementwise"
+
+
+@dataclass(frozen=True, kw_only=True)
+class OpCost:
+    """Cost of one op (one scheduled HLO instruction, or one kernel launch).
+
+    Keyword-only: every field has a default, so a positional call could
+    silently bind costs to the wrong slots (``OpCost(1e9, ...)`` putting
+    flops into ``op``) — and subclasses (``kernels.autotune.KernelCost``)
+    inherit the same guarantee.
+
+    ``flops``/``hbm_bytes``/``collective_bytes`` are effective totals with
+    ``trip_multiplier`` already applied (a dot inside a 12-trip scanned
+    layer records its full 12× contribution and ``trip_multiplier=12``).
+    ``vmem_bytes`` is the on-chip working set — zero for parsed HLO
+    records, populated by the kernel tiling models.  ``origin`` names the
+    computation (or kernel) the op came from; ``count`` supports merged
+    group records (``CostLedger.class_sums``)."""
+
+    op: str = ""
+    op_class: str = "other"
+    dtype: str = ""
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    vmem_bytes: float = 0.0
+    trip_multiplier: float = 1.0
+    origin: str = ""
+    count: int = 1
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OpCost":
+        known = set(cls.__dataclass_fields__)
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+# Numeric NPZ columns (strings ride in the JSON header).
+_NUM_COLS = ("flops", "hbm_bytes", "collective_bytes", "vmem_bytes",
+             "trip_multiplier", "count")
+_STR_COLS = ("op", "op_class", "dtype", "origin")
+
+# One class bucket — what class_sums/merge_class_sums accumulate.
+_ZERO_BUCKET = {"flops": 0.0, "hbm_bytes": 0.0, "collective_bytes": 0.0,
+                "count": 0}
+
+
+def _empty_class_sums() -> dict[str, dict]:
+    return {cls: dict(_ZERO_BUCKET) for cls in OP_CLASSES}
+
+
+def _drop_zero_classes(sums: dict[str, dict]) -> dict[str, dict]:
+    return {cls: s for cls, s in sums.items() if any(s.values())}
+
+
+class CostLedger:
+    """Ordered container of :class:`OpCost` records with groupby views.
+
+    Aggregates (``flops``, ``hbm_bytes``, ``collective_bytes``) are plain
+    left-to-right sums over the records — the parity contract with the
+    legacy scalar totals.  ``class_sums`` / ``top_k`` are the attribution
+    views every downstream consumer shares."""
+
+    def __init__(self, records: "list[OpCost] | None" = None):
+        self.records: list[OpCost] = list(records) if records else []
+
+    # -- building ----------------------------------------------------------
+
+    def append(self, record: OpCost) -> None:
+        self.records.append(record)
+
+    def extend(self, records) -> None:
+        self.records.extend(records)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, CostLedger) and self.records == other.records
+
+    # -- aggregates (the parity contract) ----------------------------------
+
+    @property
+    def flops(self) -> float:
+        total = 0.0
+        for r in self.records:
+            total += r.flops
+        return total
+
+    @property
+    def hbm_bytes(self) -> float:
+        total = 0.0
+        for r in self.records:
+            total += r.hbm_bytes
+        return total
+
+    @property
+    def collective_bytes(self) -> float:
+        total = 0.0
+        for r in self.records:
+            total += r.collective_bytes
+        return total
+
+    def totals(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes}
+
+    # -- attribution views --------------------------------------------------
+
+    def class_sums(self, *, keep_zero: bool = False) -> dict[str, dict]:
+        """Per-class aggregate: ``{cls: {flops, hbm_bytes, collective_bytes,
+        count}}`` in :data:`OP_CLASSES` order (zero classes dropped unless
+        ``keep_zero``)."""
+        sums = _empty_class_sums()
+        for r in self.records:
+            s = sums.setdefault(r.op_class, dict(_ZERO_BUCKET))
+            s["flops"] += r.flops
+            s["hbm_bytes"] += r.hbm_bytes
+            s["collective_bytes"] += r.collective_bytes
+            s["count"] += r.count
+        return sums if keep_zero else _drop_zero_classes(sums)
+
+    @staticmethod
+    def merge_class_sums(sums_list, *, keep_zero: bool = False
+                         ) -> dict[str, dict]:
+        """Merge many ``class_sums()``-shaped dicts (e.g. the
+        ``cost_classes`` of every campaign record) into one — the same
+        bucket fields and zero-class filter as :meth:`class_sums`, so an
+        aggregated view can never drift from the ledger's own."""
+        merged = _empty_class_sums()
+        for sums in sums_list:
+            for cls, s in (sums or {}).items():
+                t = merged.setdefault(cls, dict(_ZERO_BUCKET))
+                for k in _ZERO_BUCKET:
+                    t[k] += s.get(k, 0)
+        return merged if keep_zero else _drop_zero_classes(merged)
+
+    def top_k(self, k: int = 5, by: str = "hbm_bytes") -> list[OpCost]:
+        """The ``k`` most expensive records by one attribute — 'which op
+        blew the prediction' in one call."""
+        if by not in OpCost.__dataclass_fields__:
+            raise KeyError(f"unknown OpCost attribute {by!r}")
+        return sorted(self.records, key=lambda r: getattr(r, by),
+                      reverse=True)[:k]
+
+    def scaled(self, mult: float) -> "CostLedger":
+        """A copy with every record's effective totals × ``mult`` (e.g.
+        whole-module ledger → per-microbatch)."""
+        return CostLedger([
+            replace(r, flops=r.flops * mult, hbm_bytes=r.hbm_bytes * mult,
+                    collective_bytes=r.collective_bytes * mult)
+            for r in self.records
+        ])
+
+    # -- persistence (core/fileio contract) ---------------------------------
+
+    def to_json_dict(self) -> dict:
+        return {"schema": 1, "records": [r.to_dict() for r in self.records]}
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "CostLedger":
+        return cls([OpCost.from_dict(r) for r in d.get("records", [])])
+
+    def save(self, path: str) -> None:
+        """Atomic persist: ``.npz`` packs numeric columns (+ JSON header
+        for the string columns), anything else writes inspectable JSON."""
+        from repro.core.fileio import atomic_write_bytes, atomic_write_json
+
+        if path.endswith(".npz"):
+            import numpy as np
+
+            arrays = {
+                col: np.asarray([getattr(r, col) for r in self.records],
+                                dtype=np.int64 if col == "count"
+                                else np.float64)
+                for col in _NUM_COLS
+            }
+            header = json.dumps({
+                col: [getattr(r, col) for r in self.records]
+                for col in _STR_COLS
+            })
+            arrays["ledger_header"] = np.frombuffer(header.encode(),
+                                                    dtype=np.uint8)
+            atomic_write_bytes(path, lambda f: np.savez_compressed(f, **arrays),
+                               suffix=".npz")
+            return
+        atomic_write_json(path, self.to_json_dict())
+
+    @classmethod
+    def load(cls, path: str) -> "CostLedger":
+        if path.endswith(".npz"):
+            import numpy as np
+
+            with np.load(path) as z:
+                header = json.loads(bytes(z["ledger_header"].tobytes()).decode())
+                n = len(header[_STR_COLS[0]]) if header[_STR_COLS[0]] else \
+                    int(z[_NUM_COLS[0]].shape[0])
+                cols = {c: z[c] for c in _NUM_COLS}
+                return cls([
+                    OpCost(
+                        op=header["op"][i], op_class=header["op_class"][i],
+                        dtype=header["dtype"][i], origin=header["origin"][i],
+                        flops=float(cols["flops"][i]),
+                        hbm_bytes=float(cols["hbm_bytes"][i]),
+                        collective_bytes=float(cols["collective_bytes"][i]),
+                        vmem_bytes=float(cols["vmem_bytes"][i]),
+                        trip_multiplier=float(cols["trip_multiplier"][i]),
+                        count=int(cols["count"][i]),
+                    )
+                    for i in range(n)
+                ])
+        with open(path) as f:
+            return cls.from_json_dict(json.load(f))

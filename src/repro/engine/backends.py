@@ -23,7 +23,14 @@ import numpy as np
 
 from repro.core.features import FEATURE_NAMES, feature_matrix
 from repro.core.predictor import Perf4Sight
-from repro.engine.decompose import latency_terms, lm_roofline_terms, memory_terms
+from repro.engine.decompose import (
+    classwise_seconds,
+    latency_class_columns,
+    latency_terms,
+    ledger_latency_columns,
+    lm_roofline_terms,
+    memory_terms,
+)
 from repro.engine.devices import DeviceSpec, resolve_device
 from repro.engine.types import (
     STAGE_INFER,
@@ -203,6 +210,7 @@ class AnalyticalBackend:
                     self.bytes_per_el * feats[self._i_alloc]) / 1e6
         compute_s = flops / dev.peak_flops
         memory_s = bytes_moved / dev.hbm_bw
+        coeffs = dev.class_coeffs.get("cnn_latency")
         if dev.calibrated and q.stage != STAGE_TRAIN:
             # The additive combine and launch overhead were fitted on FULL
             # training steps (backward-pass dispatch included); applying
@@ -210,12 +218,21 @@ class AnalyticalBackend:
             # dominate small sub-millisecond candidates.  Inference reuses
             # only the fitted denominators under the plain roofline max.
             phi_ms = max(compute_s, memory_s) * 1e3
+        elif dev.calibrated and coeffs:
+            # Class-wise fitted constants: price the SAME decompose columns
+            # the calibration solved over (single-source-of-truth contract).
+            phi_ms = float(np.atleast_1d(classwise_seconds(
+                latency_class_columns(feats, self.bytes_per_el),
+                coeffs))[0]) * 1e3
         else:
             phi_ms = dev.combine_terms(compute_s, memory_s) * 1e3
         return CostEstimate(
             gamma_mb=float(gamma_mb), phi_ms=float(phi_ms), source=self.name,
             detail={"compute_s": float(compute_s), "memory_s": float(memory_s),
                     "device": dev.name, "calibrated": dev.calibrated,
+                    "latency_fit": "classwise" if (dev.calibrated and coeffs
+                                                   and q.stage == STAGE_TRAIN)
+                    else "aggregate",
                     "dominant": "compute" if compute_s >= memory_s else "memory"})
 
     # -- LM HLO/roofline path -------------------------------------------------
@@ -286,15 +303,26 @@ class AnalyticalBackend:
         gamma_mb = dev.round_alloc(
             mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6
         cost = parse_hlo_cost(compiled.as_text())
+        class_sums = cost.ledger.class_sums()
         compute_s, memory_s, coll_s = (
             float(v) for v in lm_roofline_terms(
                 cost.flops, cost.hbm_bytes, cost.collective_bytes, dev))
-        phi_ms = dev.combine_terms(compute_s, memory_s, coll_s) * 1e3
+        coeffs = dev.class_coeffs.get("lm_latency")
+        if coeffs:
+            # Class-wise fitted constants price the ledger's per-class
+            # columns — the same decompose.ledger_latency_columns the
+            # campaign constant fit solved over.
+            phi_ms = float(np.atleast_1d(classwise_seconds(
+                ledger_latency_columns([class_sums]), coeffs))[0]) * 1e3
+        else:
+            phi_ms = dev.combine_terms(compute_s, memory_s, coll_s) * 1e3
         terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
         return CostEstimate(
             gamma_mb=float(gamma_mb), phi_ms=float(phi_ms), source=self.name,
             detail={"flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
                     "collective_bytes": cost.collective_bytes,
+                    "cost_classes": class_sums,
+                    "latency_fit": "classwise" if coeffs else "aggregate",
                     "dominant": max(terms, key=terms.get),
                     "device": dev.name,
                     "compile_s": compile_s, "reduced": reduced})

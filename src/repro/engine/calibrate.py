@@ -175,15 +175,23 @@ def _decompose(dps: list[Datapoint], bytes_per_el: int):
     """Per-workload (flops, bytes_moved, weight_mb, act_mb) + measured
     targets — the regressors of the two NNLS systems, produced by the SAME
     ``engine/decompose.py`` terms the analytical prediction path multiplies
-    the fitted constants against."""
-    from repro.engine.decompose import latency_terms, memory_terms
+    the fitted constants against — plus the per-op-class latency columns
+    (``decompose.latency_class_columns``) the class-wise fit refines the
+    aggregate terms into."""
+    from repro.engine.decompose import (
+        latency_class_columns,
+        latency_terms,
+        memory_terms,
+    )
 
     F = np.array([dp.features for dp in dps], dtype=np.float64)
     flops, bytes_moved = latency_terms(F, bytes_per_el)
     weight_bytes, act_bytes = memory_terms(F, bytes_per_el)
+    cols = latency_class_columns(F, bytes_per_el)
     phi_s = np.array([dp.phi_ms for dp in dps]) / 1e3
     gamma_mb = np.array([dp.gamma_mb for dp in dps])
-    return flops, bytes_moved, weight_bytes / 1e6, act_bytes / 1e6, phi_s, gamma_mb
+    return (flops, bytes_moved, weight_bytes / 1e6, act_bytes / 1e6, phi_s,
+            gamma_mb, cols)
 
 
 def _mape(pred: np.ndarray, true: np.ndarray) -> float:
@@ -265,12 +273,21 @@ def calibrate(
     else:
         dps, profiled = measure_ground_truth(profiler, workloads, cache,
                                              STAGE_TRAIN)
-    flops, bytes_moved, weight_mb, act_mb, phi_s, gamma_mb = _decompose(
+    flops, bytes_moved, weight_mb, act_mb, phi_s, gamma_mb, cols = _decompose(
         dps, bytes_per_el)
 
-    # Latency: phi = c0 + c1·flops + c2·bytes, c ≥ 0.
+    from repro.engine.decompose import CNN_LATENCY_COLUMNS
+
+    # Latency, aggregate: phi = c0 + c1·flops + c2·bytes, c ≥ 0 — and the
+    # class-wise refinement over the same workloads: one coefficient per
+    # decompose.CNN_LATENCY_COLUMNS column.  The aggregate system is the
+    # class-wise one with tied byte coefficients, so the class-wise fit can
+    # only match or improve the training error; whichever achieves the
+    # lower MAPE is applied (the aggregate fallback keeps old behaviour
+    # when the split carries no signal).
     ones = np.ones_like(phi_s)
     A_lat = np.stack([ones, flops, bytes_moved], axis=1)
+    A_cls = np.stack([ones] + [cols[n] for n in CNN_LATENCY_COLUMNS], axis=1)
     b_lat = phi_s
     n_timed = 0
     if tuning_cache is not None:
@@ -278,11 +295,35 @@ def calibrate(
         n_timed = len(phi_timed)
         if n_timed:
             A_lat = np.concatenate([A_lat, A_timed])
+            # Kernel launches are matmul-class compute streaming its
+            # operands: flops → flops_matmul, bytes → hbm_elementwise.
+            A_timed_cls = np.zeros((n_timed, A_cls.shape[1]))
+            A_timed_cls[:, 0] = A_timed[:, 0]
+            A_timed_cls[:, 1 + CNN_LATENCY_COLUMNS.index("flops_matmul")] = \
+                A_timed[:, 1]
+            A_timed_cls[:, 1 + CNN_LATENCY_COLUMNS.index("hbm_elementwise")] = \
+                A_timed[:, 2]
+            A_cls = np.concatenate([A_cls, A_timed_cls])
             b_lat = np.concatenate([b_lat, phi_timed])
     c = nnls(A_lat, b_lat)
+    c_cls = nnls(A_cls, b_lat)
+    n_work = len(phi_s)
+    phi_mape_agg = _mape(A_lat[:n_work] @ c, phi_s)
+    phi_mape_cls = _mape(A_cls[:n_work] @ c_cls, phi_s)
+    use_classwise = phi_mape_cls <= phi_mape_agg
+    class_coeffs = dict(base.class_coeffs)
+    class_coeffs.pop("cnn_latency", None)
+    if use_classwise:
+        class_coeffs["cnn_latency"] = {
+            "_intercept": float(c_cls[0]),
+            **{n: float(v) for n, v in zip(CNN_LATENCY_COLUMNS, c_cls[1:])},
+        }
     # A zero coefficient means that term never binds on this grid; keep the
     # term inert with an effectively-infinite (but finite, serializable)
-    # denominator instead of dividing by zero.
+    # denominator instead of dividing by zero.  The classic fields always
+    # carry the aggregate fit — anything reading peak_flops/hbm_bw sees a
+    # self-consistent 3-term model; the class-wise refinement rides in
+    # ``class_coeffs`` and is consumed only by the class-aware paths.
     peak_flops = 1.0 / c[1] if c[1] > 0 else 1e18
     hbm_bw = 1.0 / c[2] if c[2] > 0 else 1e18
 
@@ -300,12 +341,16 @@ def calibrate(
         mem_act_scale=float(m[2]),
         combine="sum",
         calibrated=True,
+        class_coeffs=class_coeffs,
         meta={
             "base_device": base.name,
             "n_workloads": len(dps),
             "n_profiled": profiled,
             "n_timed_kernel_rows": n_timed,
-            "phi_mape": _mape(c[0] + c[1] * flops + c[2] * bytes_moved, phi_s),
+            "latency_fit": "classwise" if use_classwise else "aggregate",
+            "phi_mape": min(phi_mape_cls, phi_mape_agg),
+            "phi_mape_aggregate": phi_mape_agg,
+            "phi_mape_classwise": phi_mape_cls,
             "gamma_mape": _mape(m[0] + m[1] * weight_mb + m[2] * act_mb,
                                 gamma_mb),
         },

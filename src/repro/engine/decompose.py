@@ -18,8 +18,18 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.features import FEATURE_NAMES
+from repro.costmodel import OP_CLASSES, CostLedger
 
-__all__ = ["latency_terms", "memory_terms", "lm_roofline_terms"]
+__all__ = [
+    "latency_terms",
+    "memory_terms",
+    "lm_roofline_terms",
+    "CNN_LATENCY_COLUMNS",
+    "latency_class_columns",
+    "LM_LATENCY_COLUMNS",
+    "ledger_latency_columns",
+    "classwise_seconds",
+]
 
 _I_W = FEATURE_NAMES.index("mem_w")
 _I_IFM = FEATURE_NAMES.index("mem_ifm_grad")
@@ -57,6 +67,88 @@ def lm_roofline_terms(
     collective_bytes = np.asarray(collective_bytes, dtype=np.float64)
     return (flops / device.peak_flops, hbm_bytes / device.hbm_bw,
             collective_bytes / device.ici_bw)
+
+
+# ---------------------------------------------------------------------------
+# Class-wise columns (the per-op cost ledger refactor).
+#
+# The class-wise NNLS fits (engine/calibrate.calibrate, campaign/fit.
+# fit_hlo_constants) solve for one coefficient per column below, and the
+# class-wise prediction paths multiply the SAME columns by the fitted
+# ``DeviceSpec.class_coeffs`` — the identical single-source-of-truth
+# contract the aggregate terms above carry.  Two invariants, both tested:
+#
+#   sum over flops columns  == the aggregate flops term
+#   sum over byte columns   == the aggregate bytes_moved / hbm_bytes term
+#
+# so the aggregate fit is exactly the class-wise fit with tied
+# coefficients, and a class-wise solution can never *lose* information.
+# ---------------------------------------------------------------------------
+
+# CNN (Appendix-B feature) decomposition: all MACs are conv-lowered matmul
+# work; traffic splits into the allocation families (elementwise streaming)
+# and the im2col lowering volume (pure data movement).
+CNN_LATENCY_COLUMNS: tuple[str, ...] = (
+    "flops_matmul", "hbm_elementwise", "hbm_data_movement",
+)
+
+
+def latency_class_columns(feats: np.ndarray, bytes_per_el: int
+                          ) -> dict[str, np.ndarray]:
+    """Per-class latency regressor columns (``CNN_LATENCY_COLUMNS`` order)
+    for training-step workloads.  ``flops_matmul`` equals the aggregate
+    flops term; the two byte columns sum to the aggregate bytes_moved."""
+    F = np.atleast_2d(np.asarray(feats, dtype=np.float64))
+    return {
+        "flops_matmul": 2.0 * F[:, _I_OPS],
+        "hbm_elementwise": float(bytes_per_el) * F[:, _I_ALLOC],
+        "hbm_data_movement": float(bytes_per_el) * F[:, _I_I2C],
+    }
+
+
+# LM (HLO ledger) decomposition: one flops + one bytes column per op class,
+# plus the total collective traffic.
+LM_LATENCY_COLUMNS: tuple[str, ...] = tuple(
+    [f"flops_{cls}" for cls in OP_CLASSES]
+    + [f"hbm_{cls}" for cls in OP_CLASSES]
+    + ["collective"]
+)
+
+
+def ledger_latency_columns(class_sums) -> dict[str, np.ndarray]:
+    """(``LM_LATENCY_COLUMNS`` name → per-row array) from per-ledger class
+    sums.
+
+    ``class_sums`` is a list whose entries are either
+    :class:`~repro.costmodel.CostLedger` instances or the
+    ``CostLedger.class_sums()`` dicts campaign records persist
+    (``cost_classes``) — one entry per workload row."""
+    sums = [cs.class_sums() if isinstance(cs, CostLedger) else (cs or {})
+            for cs in class_sums]
+    cols: dict[str, np.ndarray] = {}
+    for cls in OP_CLASSES:
+        cols[f"flops_{cls}"] = np.array(
+            [s.get(cls, {}).get("flops", 0.0) for s in sums], dtype=np.float64)
+        cols[f"hbm_{cls}"] = np.array(
+            [s.get(cls, {}).get("hbm_bytes", 0.0) for s in sums],
+            dtype=np.float64)
+    cols["collective"] = np.array(
+        [sum(s.get(cls, {}).get("collective_bytes", 0.0) for cls in s)
+         for s in sums], dtype=np.float64)
+    return cols
+
+
+def classwise_seconds(columns: dict, coeffs: dict) -> np.ndarray:
+    """Seconds under class-wise fitted constants: the coefficients'
+    ``_intercept`` plus Σ coeff × column over the shared column names.
+    Columns absent from ``coeffs`` (classes the fit zeroed or never saw)
+    contribute nothing — exactly how the NNLS treated them."""
+    total = np.asarray(float(coeffs.get("_intercept", 0.0)), dtype=np.float64)
+    for name, col in columns.items():
+        c = coeffs.get(name, 0.0)
+        if c:
+            total = total + c * np.asarray(col, dtype=np.float64)
+    return total
 
 
 def memory_terms(feats: np.ndarray, bytes_per_el: int) -> tuple[np.ndarray, np.ndarray]:

@@ -62,6 +62,7 @@ FITTED_FIELDS = (
     "mem_base_mb",
     "combine",
     "calibrated",
+    "class_coeffs",
 )
 
 
@@ -100,6 +101,13 @@ class DeviceSpec:
     mem_base_mb: float = 0.0           # fixed runtime footprint
     combine: str = "max"               # "max" roofline | "sum" calibrated
     calibrated: bool = False
+    # Class-wise fitted constants (the per-op cost ledger refactor): maps a
+    # fit family ("cnn_latency", "lm_latency") to {column: seconds-per-unit}
+    # coefficients over the engine/decompose class columns, with the fit's
+    # intercept under "_intercept".  Empty dict = aggregate constants only.
+    # hash=False: a dict would make the frozen spec unhashable; identity
+    # for hashing purposes is the fingerprint (which covers this field).
+    class_coeffs: dict = field(default_factory=dict, hash=False)
     meta: dict = field(default_factory=dict, compare=False)
 
     def __post_init__(self):
@@ -131,7 +139,8 @@ class DeviceSpec:
         budgets, not estimates, but is still in the key — editing a spec's
         capacity invalidates its cached estimates (a harmless recompute)
         rather than risking any constant change silently aliasing."""
-        blob = json.dumps([getattr(self, f) for f in FITTED_FIELDS])
+        blob = json.dumps([getattr(self, f) for f in FITTED_FIELDS],
+                          sort_keys=True)
         return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
     def hw_table(self) -> dict:
@@ -291,9 +300,10 @@ def save_device_spec(path: str, spec: DeviceSpec) -> None:
         arrays = {
             f: np.asarray(getattr(spec, f))
             for f in FITTED_FIELDS
-            if f != "combine"
+            if f not in ("combine", "class_coeffs")
         }
         header = json.dumps({"name": spec.name, "combine": spec.combine,
+                             "class_coeffs": spec.class_coeffs,
                              "meta": spec.meta})
         arrays["header"] = np.frombuffer(header.encode(), dtype=np.uint8)
         atomic_write_bytes(path, lambda f: np.savez_compressed(f, **arrays),
@@ -308,10 +318,12 @@ def load_device_spec(path: str) -> DeviceSpec:
 
         with np.load(path) as z:
             header = json.loads(bytes(z["header"].tobytes()).decode())
-            d = {f: z[f].item() for f in FITTED_FIELDS if f != "combine"}
+            d = {f: z[f].item() for f in FITTED_FIELDS
+                 if f not in ("combine", "class_coeffs") and f in z}
             d["alloc_granularity"] = int(d["alloc_granularity"])
             d["calibrated"] = bool(d["calibrated"])
             d.update(name=header["name"], combine=header["combine"],
+                     class_coeffs=header.get("class_coeffs", {}),
                      meta=header.get("meta", {}))
             return DeviceSpec(**d)
     with open(path) as f:

@@ -38,6 +38,7 @@ from dataclasses import dataclass, field
 from typing import Callable
 
 from repro.core.fileio import atomic_write_json, load_json_tolerant
+from repro.costmodel import OpCost
 
 __all__ = [
     "KernelCost",
@@ -97,18 +98,20 @@ def largest_dividing_block(n: int, requested: int | None) -> int:
     return b
 
 
-@dataclass(frozen=True)
-class KernelCost:
-    """Static cost of one kernel launch under one block configuration.
+@dataclass(frozen=True, kw_only=True)
+class KernelCost(OpCost):
+    """Static cost of one kernel launch under one block configuration — a
+    thin view over the shared :class:`~repro.costmodel.OpCost` record, so
+    tuner rows and calibration rows carry one schema (a timed winner feeds
+    ``engine/calibrate.timed_tuning_rows`` as an op-class-attributed
+    latency row, exactly like a parsed HLO instruction).
 
-    ``n_steps`` counts sequenced steps — grid programs plus inner-loop
-    trips — each paying ``STEP_OVERHEAD_S``.  ``mxu_min_dim`` is the
-    smallest matmul operand dim the tiling produces; it scales effective
-    MXU peak by ``min(1, dim/128)``."""
+    On top of the OpCost fields (``flops``, ``hbm_bytes``, ``vmem_bytes``,
+    ``op_class``, …): ``n_steps`` counts sequenced steps — grid programs
+    plus inner-loop trips — each paying ``STEP_OVERHEAD_S``, and
+    ``mxu_min_dim`` is the smallest matmul operand dim the tiling
+    produces; it scales effective MXU peak by ``min(1, dim/128)``."""
 
-    flops: float
-    hbm_bytes: float
-    vmem_bytes: float
     n_steps: int = 1
     mxu_min_dim: int = MXU_DIM
 

@@ -66,6 +66,7 @@ def cost(shape: dict, config: dict) -> KernelCost:
     vmem = (bpe * (Hp * Wp * C + KH * KW * C * bo + OH * OW * bo)
             + 4.0 * OH * OW * bo)  # f32 accumulator
     return KernelCost(
+        op="conv_mm", op_class="conv", origin="kernel",
         flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
         n_steps=N * n_bo,
         mxu_min_dim=min(bo, C, OH * OW),

@@ -67,6 +67,7 @@ def cost(shape: dict, config: dict) -> KernelCost:
             + 4.0 * 3 * bq)                            # m/l running stats
     n_programs = B * H * (Sq // bq)
     return KernelCost(
+        op="flash_attention", op_class="matmul", origin="kernel",
         flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
         n_steps=n_programs * (1 + Sk // bk),
         mxu_min_dim=min(bq, bk, Dh),

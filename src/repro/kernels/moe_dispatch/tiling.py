@@ -91,6 +91,7 @@ def cost(shape: dict, config: dict) -> KernelCost:
     # Per-(group, expert) program working set: one expert's operand block.
     vmem = bpe * (C * D + C * F + D * F)
     return KernelCost(
+        op="moe_dispatch", op_class="matmul", origin="kernel",
         flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
         n_steps=G * E,
         mxu_min_dim=min(C, D, F),

@@ -58,6 +58,7 @@ def cost(shape: dict, config: dict) -> KernelCost:
                      + l * P                  # y accumulator
                      + N * P + 2 * l))        # state tile, cum/decay vectors
     return KernelCost(
+        op="ssm_scan", op_class="matmul", origin="kernel",
         flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
         n_steps=B * nc * H + nc,              # grid programs + scan steps
         mxu_min_dim=min(l, N, P),

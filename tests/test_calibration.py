@@ -159,10 +159,27 @@ def test_calibrated_constants_do_not_leak_into_infer_stage(ground_truth):
     expect_ms = max(inf.detail["compute_s"], inf.detail["memory_s"]) * 1e3
     assert inf.phi_ms == pytest.approx(expect_ms)
     assert inf.phi_ms < spec.launch_overhead_s * 1e3 + expect_ms
-    # train phi DOES carry the fitted overhead (additive combine)
+    # train phi DOES carry the fitted intercept — through the class-wise
+    # coefficients when the fit chose them, the additive aggregate combine
+    # otherwise
     tr = backend.estimate([CostQuery(spec=net, bs=1, stage="train")])[0]
-    expect_tr = (spec.launch_overhead_s
-                 + tr.detail["compute_s"] + tr.detail["memory_s"]) * 1e3
+    coeffs = spec.class_coeffs.get("cnn_latency")
+    if tr.detail["latency_fit"] == "classwise":
+        import numpy as np
+
+        from repro.core.features import network_features
+        from repro.engine.decompose import (
+            classwise_seconds,
+            latency_class_columns,
+        )
+
+        cols = latency_class_columns(
+            np.asarray(network_features(net, 1), dtype=np.float64), 4)
+        expect_tr = float(np.atleast_1d(
+            classwise_seconds(cols, coeffs))[0]) * 1e3
+    else:
+        expect_tr = (spec.launch_overhead_s
+                     + tr.detail["compute_s"] + tr.detail["memory_s"]) * 1e3
     assert tr.phi_ms == pytest.approx(expect_tr)
 
 

@@ -34,13 +34,22 @@ def fake_measure(cell: CampaignCell) -> dict:
     the cell geometry, so forests have signal and re-runs are bit-equal."""
     t = cell.shape.tokens
     train = cell.shape.kind == "train"
+    flops = 1e6 * t * (3.0 if train else 1.0)
+    hbm = 2e5 * t
+    mm_bytes = 0.5 * hbm  # exact halving: the two classes re-sum bit-exactly
     return {
         "gamma_mb": 8.0 + 0.02 * t + (4.0 if train else 0.0),
         "phi_ms": 1.0 + 0.004 * t * (3.0 if train else 1.0),
         "compile_s": 0.0,
-        "flops": 1e6 * t * (3.0 if train else 1.0),
-        "hbm_bytes": 2e5 * t,
+        "flops": flops,
+        "hbm_bytes": hbm,
         "collective_bytes": 0.0,
+        "cost_classes": {
+            "matmul": {"flops": flops, "hbm_bytes": mm_bytes,
+                       "collective_bytes": 0.0, "count": 4},
+            "elementwise": {"flops": 0.0, "hbm_bytes": hbm - mm_bytes,
+                            "collective_bytes": 0.0, "count": 9},
+        },
         "temp_mb": 1.0, "arg_mb": 1.0, "n_devices": 1, "executed": True,
     }
 
@@ -288,6 +297,113 @@ class TestFit:
         assert owner is fb and fb.lm is forest
         with pytest.raises(ValueError):
             register_lm_forest(EnsembleBackend([AnalyticalBackend()]), forest)
+
+
+# ---------------------------------------------------------------------------
+# satellite: fit-time device-fingerprint guard
+# ---------------------------------------------------------------------------
+
+
+class TestFingerprintGuard:
+    def _records(self, tmp_path, fingerprint=None):
+        plan = smoke_plan(subsample=8, seed=0)
+        runner, _ = run_fake_campaign(plan, str(tmp_path / "l.jsonl"))
+        records = runner.ledger.records("ok")
+        if fingerprint is not None:
+            for r in records:
+                r["device_fingerprint"] = fingerprint
+        return records
+
+    def test_matching_fingerprints_pass(self, tmp_path):
+        from repro.campaign.fit import check_device_fingerprints
+        from repro.engine.devices import get_device
+
+        records = self._records(tmp_path,
+                                get_device("host_cpu").fingerprint())
+        out = check_device_fingerprints(records)
+        assert out == {"checked": len(records), "unstamped": 0,
+                       "mismatched": 0}
+        forest = fit_lm_forest(records, holdout_frac=0.25, seed=0)
+        assert forest.meta["fingerprint_check"]["mismatched"] == 0
+
+    def test_unstamped_legacy_records_pass(self, tmp_path):
+        from repro.campaign.fit import check_device_fingerprints
+
+        records = self._records(tmp_path)  # fake_measure stamps nothing
+        out = check_device_fingerprints(records)
+        assert out["unstamped"] == len(records) and out["checked"] == 0
+        assert fit_lm_forest(records, holdout_frac=0.25, seed=0).fitted
+
+    def test_stale_fingerprint_refused(self, tmp_path):
+        records = self._records(tmp_path, "deadbeefdeadbeef")
+        with pytest.raises(ValueError, match="different device constants"):
+            fit_lm_forest(records, holdout_frac=0.25, seed=0)
+        with pytest.raises(ValueError, match="different device constants"):
+            fit_hlo_constants(records)
+
+    def test_allow_mixed_opts_in(self, tmp_path):
+        records = self._records(tmp_path, "deadbeefdeadbeef")
+        forest = fit_lm_forest(records, holdout_frac=0.25, seed=0,
+                               allow_mixed=True)
+        assert forest.fitted
+        assert forest.meta["fingerprint_check"]["mismatched"] == len(records)
+        assert fit_hlo_constants(records, allow_mixed=True).calibrated
+
+    def test_device_override_trips_the_guard(self, tmp_path):
+        """Re-featurizing a campaign under another spec is exactly the
+        mismatch the guard exists for: explicit --allow-mixed required."""
+        from repro.engine.devices import get_device
+
+        records = self._records(tmp_path,
+                                get_device("host_cpu").fingerprint())
+        with pytest.raises(ValueError, match="different device constants"):
+            fit_lm_forest(records, device="tpu_v5e", holdout_frac=0.25,
+                          seed=0)
+        forest = fit_lm_forest(records, device="tpu_v5e", holdout_frac=0.25,
+                               seed=0, allow_mixed=True)
+        assert forest.meta["device"] == "tpu_v5e"
+
+    def test_mixed_device_ledger_refused_for_hlo_fit(self):
+        """One NNLS system fits ONE device; a fleet ledger must be
+        filtered (or explicitly allow_mixed) even when every record's
+        fingerprint matches its own device."""
+        rng = np.random.default_rng(0)
+        records = []
+        for i in range(8):
+            records.append({
+                "status": "ok", "plan_hash": "x",
+                "device": "host_cpu" if i % 2 else "tpu_v5e",
+                "flops": float(rng.uniform(1e6, 1e8)),
+                "hbm_bytes": float(rng.uniform(1e5, 1e7)),
+                "collective_bytes": 0.0, "phi_ms": 1.0 + i,
+            })
+        with pytest.raises(ValueError, match="one device"):
+            fit_hlo_constants(records)
+        assert fit_hlo_constants(records, allow_mixed=True).calibrated
+        # single-device ledgers are unaffected
+        for r in records:
+            r["device"] = "host_cpu"
+        assert fit_hlo_constants(records).calibrated
+
+    def test_cli_allow_mixed_flag(self, tmp_path, monkeypatch):
+        from repro.campaign import __main__ as cli
+        from repro.engine.devices import get_device
+
+        plan_path = str(tmp_path / "plan.json")
+        assert cli.main(["plan", "--smoke", "--subsample", "6",
+                         "--out", plan_path]) == 0
+        led = str(tmp_path / "ledger.jsonl")
+        monkeypatch.setattr(
+            "repro.campaign.runner.measure_cell",
+            lambda cell, **kw: {**fake_measure(cell),
+                                "device_fingerprint": "stale00stale00"})
+        assert cli.main(["run", "--plan", plan_path, "--ledger", led]) == 0
+        out_path = str(tmp_path / "forest.json")
+        with pytest.raises(ValueError, match="--allow-mixed"):
+            cli.main(["fit", "--ledger", led, "--out", out_path])
+        assert cli.main(["fit", "--ledger", led, "--out", out_path,
+                         "--allow-mixed"]) == 0
+        assert os.path.exists(out_path)
 
 
 # ---------------------------------------------------------------------------
@@ -550,6 +666,13 @@ class TestCli:
         assert cli.main(["status", "--plan", plan_path, "--ledger", led]) == 0
         out_json = capsys.readouterr().out
         assert '"pending": 0' in out_json
+
+        # per-op-class breakdown view over the recorded ledgers
+        assert cli.main(["status", "--ledger", led, "--breakdown"]) == 0
+        breakdown = json.loads(capsys.readouterr().out)["breakdown"]
+        assert breakdown["records_with_breakdown"] == 4
+        assert breakdown["classes"]["matmul"]["flops_share"] == 1.0
+        assert 0 < breakdown["classes"]["elementwise"]["hbm_share"] < 1
 
         forest_path = str(tmp_path / "forest.npz")
         assert cli.main(["fit", "--ledger", led, "--out", forest_path,

@@ -1,0 +1,501 @@
+"""Per-op cost ledger: parity with the legacy aggregates, round-trips,
+class-wise NNLS recovery, and the shared-schema contracts downstream."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlo_cost import parse_hlo_cost
+from repro.costmodel import OP_CLASSES, CostLedger, OpCost, classify_op
+
+
+def _cost(fn, *args):
+    return parse_hlo_cost(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def _golden_costs():
+    """The golden HLO fixtures: the same programs test_hlo_cost.py pins
+    exact FLOP counts for, plus a collective-free elementwise one."""
+    x64 = jnp.zeros((64, 64))
+    ws12 = jnp.zeros((12, 64, 64))
+    x32 = jnp.zeros((32, 32))
+    ws5 = jnp.zeros((5, 32, 32))
+
+    def scan_f(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    def loss(ws, x):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0].sum()
+
+    return {
+        "dot": _cost(lambda a, b: a @ b, jnp.zeros((128, 64)),
+                     jnp.zeros((64, 32))),
+        "scan": _cost(scan_f, x64, ws12),
+        "grad_scan": _cost(jax.grad(loss), ws5, x32),
+        "elementwise": _cost(lambda x: x * 2 + 1,
+                             jnp.zeros((1024, 1024), jnp.float32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# parity: sum(ledger) == the legacy aggregates, exactly
+# ---------------------------------------------------------------------------
+
+
+class TestParity:
+    def test_ledger_sums_equal_aggregates_exactly(self):
+        for name, cost in _golden_costs().items():
+            led = cost.ledger
+            assert len(led) > 0, name
+            # bit-identical, not approx: one accumulation path by design
+            assert sum(r.flops for r in led) == cost.flops, name
+            assert sum(r.hbm_bytes for r in led) == cost.hbm_bytes, name
+            assert sum(r.collective_bytes for r in led) \
+                == cost.collective_bytes, name
+            # and the groupby view re-sums to the same totals
+            sums = cost.by_class()
+            assert sum(s["flops"] for s in sums.values()) == cost.flops
+            assert sum(s["hbm_bytes"] for s in sums.values()) == cost.hbm_bytes
+
+    def test_legacy_exact_flop_values_still_hold(self):
+        costs = _golden_costs()
+        assert costs["dot"].flops == 2 * 128 * 64 * 32
+        assert costs["scan"].flops == 12 * 2 * 64**3
+        assert costs["grad_scan"].flops == pytest.approx(15 * 2 * 32**3,
+                                                         rel=0.01)
+
+    def test_flops_attributed_to_matmul_class(self):
+        sums = _golden_costs()["scan"].by_class()
+        assert sums["matmul"]["flops"] == 12 * 2 * 64**3
+        # nothing else claims flops
+        assert all(s["flops"] == 0 for cls, s in sums.items()
+                   if cls != "matmul")
+
+    def test_scanned_records_carry_the_trip_multiplier(self):
+        led = _golden_costs()["scan"].ledger
+        scanned = [r for r in led if r.trip_multiplier == 12]
+        assert scanned, "no record inherited the trip count"
+        assert any(r.flops > 0 for r in scanned)
+
+    def test_elementwise_program_has_no_matmul(self):
+        sums = _golden_costs()["elementwise"].by_class()
+        assert sums.get("matmul", {"flops": 0})["flops"] == 0
+        assert sum(s["hbm_bytes"] for s in sums.values()) > 4e6
+
+
+# ---------------------------------------------------------------------------
+# the taxonomy
+# ---------------------------------------------------------------------------
+
+
+class TestClassify:
+    def test_closed_vocabulary(self):
+        for op in ("dot", "convolution", "all-reduce", "all-gather-start",
+                   "reduce", "dynamic-slice", "add", "tanh", "custom-call",
+                   "fusion", "weird-new-op"):
+            assert classify_op(op) in OP_CLASSES
+
+    def test_core_mappings(self):
+        assert classify_op("dot") == "matmul"
+        assert classify_op("convolution") == "conv"
+        assert classify_op("all-reduce") == "collective"
+        assert classify_op("all-reduce-start") == "collective"
+        # the async second half must not fall through to elementwise —
+        # its HBM output bytes are collective-class traffic
+        assert classify_op("all-reduce-done") == "collective"
+        assert classify_op("all-gather-done") == "collective"
+        assert classify_op("copy-done") == "data_movement"
+        assert classify_op("reduce") == "reduction"
+        assert classify_op("dynamic-update-slice") == "data_movement"
+        assert classify_op("add") == "elementwise"
+        assert classify_op("custom-call") == "other"
+
+    def test_wrapper_classifies_as_the_work_it_feeds(self):
+        assert classify_op("fusion") == "elementwise"
+        assert classify_op("fusion", dot_flops=1e6) == "matmul"
+        assert classify_op("fusion", conv_flops=1e6) == "conv"
+        assert classify_op("fusion", dot_flops=1.0, conv_flops=2.0) == "conv"
+
+
+# ---------------------------------------------------------------------------
+# container behaviour + persistence
+# ---------------------------------------------------------------------------
+
+
+class TestLedger:
+    def _ledger(self):
+        return CostLedger([
+            OpCost(op="dot", op_class="matmul", dtype="f32", flops=100.0,
+                   hbm_bytes=10.0, origin="entry"),
+            OpCost(op="add", op_class="elementwise", dtype="bf16",
+                   hbm_bytes=30.0, trip_multiplier=4.0, origin="body"),
+            OpCost(op="all-reduce", op_class="collective", dtype="f32",
+                   hbm_bytes=5.0, collective_bytes=50.0, origin="entry"),
+        ])
+
+    def test_totals_and_class_sums(self):
+        led = self._ledger()
+        assert led.totals() == {"flops": 100.0, "hbm_bytes": 45.0,
+                                "collective_bytes": 50.0}
+        sums = led.class_sums()
+        assert set(sums) == {"matmul", "elementwise", "collective"}
+        assert sums["elementwise"] == {"flops": 0.0, "hbm_bytes": 30.0,
+                                       "collective_bytes": 0.0, "count": 1}
+
+    def test_merge_class_sums_matches_ledger_view(self):
+        led = self._ledger()
+        merged = CostLedger.merge_class_sums([led.class_sums(),
+                                              led.class_sums()])
+        doubled = CostLedger(led.records * 2).class_sums()
+        assert merged == doubled
+        # missing/empty entries tolerated; zero classes filtered identically
+        assert CostLedger.merge_class_sums([{}, None]) == {}
+        assert "matmul" in CostLedger.merge_class_sums(
+            [{}], keep_zero=True)
+
+    def test_records_are_keyword_only(self):
+        # positional construction would silently bind costs to the wrong
+        # slots (flops into ``op``) — it must raise instead
+        with pytest.raises(TypeError):
+            OpCost("dot", "matmul")
+        from repro.kernels.autotune import KernelCost
+
+        with pytest.raises(TypeError):
+            KernelCost(1e9, 1e6, 1e3)
+
+    def test_top_k(self):
+        led = self._ledger()
+        assert [r.op for r in led.top_k(2, by="hbm_bytes")] == ["add", "dot"]
+        assert [r.op for r in led.top_k(1, by="flops")] == ["dot"]
+        with pytest.raises(KeyError):
+            led.top_k(1, by="nope")
+
+    def test_scaled(self):
+        led = self._ledger().scaled(2.0)
+        assert led.flops == 200.0 and led.collective_bytes == 100.0
+        # vmem/trip metadata untouched
+        assert led.records[1].trip_multiplier == 4.0
+
+    @pytest.mark.parametrize("ext", ["json", "npz"])
+    def test_roundtrip(self, tmp_path, ext):
+        led = self._ledger()
+        path = str(tmp_path / f"ledger.{ext}")
+        led.save(path)
+        loaded = CostLedger.load(path)
+        assert loaded == led
+        assert loaded.totals() == led.totals()
+
+    @pytest.mark.parametrize("ext", ["json", "npz"])
+    def test_roundtrip_real_parse(self, tmp_path, ext):
+        cost = _golden_costs()["grad_scan"]
+        path = str(tmp_path / f"ledger.{ext}")
+        cost.ledger.save(path)
+        loaded = CostLedger.load(path)
+        assert loaded == cost.ledger
+        assert loaded.flops == cost.flops
+        assert loaded.hbm_bytes == cost.hbm_bytes
+
+    def test_empty_roundtrip(self, tmp_path):
+        for ext in ("json", "npz"):
+            path = str(tmp_path / f"empty.{ext}")
+            CostLedger().save(path)
+            assert len(CostLedger.load(path)) == 0
+
+
+# ---------------------------------------------------------------------------
+# KernelCost is a view over OpCost (one schema for tuner + calibration rows)
+# ---------------------------------------------------------------------------
+
+
+class TestKernelCostView:
+    def test_kernel_cost_is_an_opcost(self):
+        from repro.kernels.autotune import KernelCost, get_tiling
+
+        assert issubclass(KernelCost, OpCost)
+        for kernel, want_cls in (("conv_mm", "conv"),
+                                 ("flash_attention", "matmul"),
+                                 ("ssm_scan", "matmul"),
+                                 ("moe_dispatch", "matmul")):
+            tiling = get_tiling(kernel)
+            shape = _kernel_shape(kernel)
+            cost = tiling.cost(shape, tiling.default(shape))
+            assert isinstance(cost, OpCost), kernel
+            assert cost.op_class == want_cls, kernel
+            assert cost.op == kernel
+            assert cost.flops > 0 and cost.vmem_bytes > 0
+
+    def test_kernel_cost_feeds_a_ledger(self):
+        from repro.kernels.autotune import get_tiling
+
+        tiling = get_tiling("flash_attention")
+        shape = _kernel_shape("flash_attention")
+        led = CostLedger([tiling.cost(shape, tiling.default(shape))])
+        sums = led.class_sums()
+        assert sums["matmul"]["flops"] == led.flops > 0
+
+
+def _kernel_shape(kernel: str) -> dict:
+    from repro.kernels import (
+        conv_mm,
+        flash_attention,
+        moe_dispatch,
+        ssm_scan,
+    )
+
+    if kernel == "conv_mm":
+        return conv_mm.tiling.shape_key((2, 16, 16, 32), (3, 3, 32, 64),
+                                        stride=1, padding=1, dtype="float32")
+    if kernel == "flash_attention":
+        return flash_attention.tiling.shape_key(
+            (1, 2, 256, 64), (1, 2, 256, 64), causal=True, dtype="bfloat16")
+    if kernel == "ssm_scan":
+        return ssm_scan.tiling.shape_key((2, 256, 4, 64), 16, dtype="float32")
+    return moe_dispatch.tiling.shape_key(B=4, S=32, D=128, E=4, K=2, F=128,
+                                         capacity_factor=1.25,
+                                         dtype="bfloat16")
+
+
+# ---------------------------------------------------------------------------
+# class-wise NNLS: planted per-class constants are recovered
+# ---------------------------------------------------------------------------
+
+
+class TestClasswiseNnls:
+    def test_cnn_calibrate_recovers_planted_class_constants(self):
+        """Targets built with DIFFERENT per-byte-class costs: the aggregate
+        3-term fit cannot represent them, the class-wise fit can — so
+        calibrate() must choose class-wise and drive the MAPE to ~0."""
+        from repro.core.dataset import Datapoint
+        from repro.core.features import FEATURE_NAMES
+        from repro.engine.backends import AnalyticalBackend
+        from repro.engine.calibrate import calibrate
+        from repro.engine.decompose import latency_class_columns, memory_terms
+
+        c0, c_fl, c_alloc, c_i2c = 2e-3, 1e-11, 3e-9, 9e-8
+        rng = np.random.default_rng(0)
+        dps = []
+        for i in range(10):
+            f = rng.uniform(1e3, 1e6, size=len(FEATURE_NAMES))
+            cols = latency_class_columns(f, 4)
+            w, a = memory_terms(f, 4)
+            phi_s = (c0 + c_fl * cols["flops_matmul"][0]
+                     + c_alloc * cols["hbm_elementwise"][0]
+                     + c_i2c * cols["hbm_data_movement"][0])
+            dps.append(Datapoint(
+                family="synthetic", level=0.1 * i, strategy="random", bs=2,
+                width_mult=0.25, input_hw=16, seed=0,
+                gamma_mb=float(5 + (w[0] + a[0]) / 1e6),
+                phi_ms=float(phi_s * 1e3),
+                features=[float(v) for v in f]))
+        backend = AnalyticalBackend()
+        spec = calibrate(backend, None, [], datapoints=dps, apply=True)
+        assert spec.meta["latency_fit"] == "classwise"
+        assert spec.meta["phi_mape"] < 1e-6
+        # aggregate genuinely cannot fit these (distinct byte costs)
+        assert spec.meta["phi_mape_aggregate"] > spec.meta["phi_mape"]
+        coeffs = spec.class_coeffs["cnn_latency"]
+        assert coeffs["_intercept"] == pytest.approx(c0, rel=1e-3)
+        assert coeffs["flops_matmul"] == pytest.approx(c_fl, rel=1e-3)
+        assert coeffs["hbm_elementwise"] == pytest.approx(c_alloc, rel=1e-3)
+        assert coeffs["hbm_data_movement"] == pytest.approx(c_i2c, rel=1e-3)
+
+    def test_lm_fit_hlo_constants_recovers_planted_class_constants(self):
+        """Campaign records with per-class breakdowns and phi built from
+        DIFFERENT per-class byte costs: aggregate 4-term can't represent
+        them; the class-wise fit recovers the planted coefficients."""
+        from repro.campaign import fit_hlo_constants
+
+        c0, c_mm_f, c_ew_b, c_dm_b = 1e-3, 5e-12, 2e-9, 8e-8
+        rng = np.random.default_rng(1)
+        records = []
+        for i in range(12):
+            fl = float(rng.uniform(1e6, 1e8))
+            ew = float(rng.uniform(1e5, 1e7))
+            dm = float(rng.uniform(1e4, 1e6))
+            classes = {
+                "matmul": {"flops": fl, "hbm_bytes": 0.0,
+                           "collective_bytes": 0.0, "count": 3},
+                "elementwise": {"flops": 0.0, "hbm_bytes": ew,
+                                "collective_bytes": 0.0, "count": 9},
+                "data_movement": {"flops": 0.0, "hbm_bytes": dm,
+                                  "collective_bytes": 0.0, "count": 2},
+            }
+            phi_s = c0 + c_mm_f * fl + c_ew_b * ew + c_dm_b * dm
+            records.append({
+                "status": "ok", "device": "host_cpu", "plan_hash": "x",
+                "flops": fl, "hbm_bytes": ew + dm, "collective_bytes": 0.0,
+                "cost_classes": classes, "phi_ms": phi_s * 1e3,
+            })
+        spec = fit_hlo_constants(records)
+        assert spec.meta["latency_fit"] == "classwise"
+        assert spec.meta["phi_mape"] < 1e-6
+        assert spec.meta["phi_mape_aggregate"] > 1e-3
+        coeffs = spec.class_coeffs["lm_latency"]
+        assert coeffs["_intercept"] == pytest.approx(c0, rel=1e-3)
+        assert coeffs["flops_matmul"] == pytest.approx(c_mm_f, rel=1e-3)
+        assert coeffs["hbm_elementwise"] == pytest.approx(c_ew_b, rel=1e-3)
+        assert coeffs["hbm_data_movement"] == pytest.approx(c_dm_b, rel=1e-3)
+
+    def test_lm_fit_falls_back_without_breakdowns(self):
+        from repro.campaign import fit_hlo_constants
+
+        peak, bw, c0 = 2e9, 5e8, 3e-3
+        rng = np.random.default_rng(0)
+        records = []
+        for _ in range(8):
+            fl = float(rng.uniform(1e6, 1e8))
+            hb = float(rng.uniform(1e5, 1e7))
+            records.append({
+                "status": "ok", "device": "host_cpu", "plan_hash": "x",
+                "flops": fl, "hbm_bytes": hb, "collective_bytes": 0.0,
+                "phi_ms": (c0 + fl / peak + hb / bw) * 1e3,
+            })
+        spec = fit_hlo_constants(records)  # no cost_classes anywhere
+        assert spec.meta["latency_fit"] == "aggregate"
+        assert spec.meta["phi_mape_classwise"] is None
+        assert "lm_latency" not in spec.class_coeffs
+        assert spec.peak_flops == pytest.approx(peak, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# decompose: class columns refine (and re-sum to) the aggregate terms
+# ---------------------------------------------------------------------------
+
+
+class TestDecomposeColumns:
+    def test_cnn_columns_sum_to_aggregate_terms(self):
+        from repro.core.features import FEATURE_NAMES
+        from repro.engine.decompose import (
+            latency_class_columns,
+            latency_terms,
+        )
+
+        rng = np.random.default_rng(3)
+        F = rng.uniform(0, 1e6, size=(7, len(FEATURE_NAMES)))
+        flops, bytes_moved = latency_terms(F, 4)
+        cols = latency_class_columns(F, 4)
+        np.testing.assert_array_equal(cols["flops_matmul"], flops)
+        np.testing.assert_allclose(
+            cols["hbm_elementwise"] + cols["hbm_data_movement"], bytes_moved)
+
+    def test_ledger_columns_sum_to_scalar_totals(self):
+        from repro.engine.decompose import ledger_latency_columns
+
+        cost = _golden_costs()["grad_scan"]
+        cols = ledger_latency_columns([cost.ledger])
+        assert sum(float(cols[f"flops_{c}"][0]) for c in OP_CLASSES) \
+            == cost.flops
+        assert sum(float(cols[f"hbm_{c}"][0]) for c in OP_CLASSES) \
+            == cost.hbm_bytes
+        assert float(cols["collective"][0]) == cost.collective_bytes
+
+    def test_classwise_seconds_prices_the_columns(self):
+        from repro.engine.decompose import classwise_seconds
+
+        cols = {"flops_matmul": np.array([2.0, 4.0]),
+                "hbm_elementwise": np.array([10.0, 0.0])}
+        coeffs = {"_intercept": 1.0, "flops_matmul": 0.5,
+                  "hbm_elementwise": 0.1, "never_seen": 99.0}
+        np.testing.assert_allclose(classwise_seconds(cols, coeffs),
+                                   [1.0 + 1.0 + 1.0, 1.0 + 2.0])
+
+
+# ---------------------------------------------------------------------------
+# lm_features: one histogram function, two providers
+# ---------------------------------------------------------------------------
+
+
+class TestClassFeatures:
+    def test_feature_names_extended_consistently(self):
+        from repro.campaign.lm_features import (
+            CLASS_FEATURE_NAMES,
+            LM_FEATURE_NAMES,
+        )
+
+        assert len(CLASS_FEATURE_NAMES) == 2 * len(OP_CLASSES)
+        assert LM_FEATURE_NAMES[-len(CLASS_FEATURE_NAMES):] \
+            == CLASS_FEATURE_NAMES
+
+    def test_analytic_histogram_in_cell_features(self):
+        from repro.campaign.lm_features import (
+            CLASS_FEATURE_NAMES,
+            LM_FEATURE_NAMES,
+            cell_features,
+        )
+        from repro.configs.base import ShapeSpec
+        from repro.configs.registry import get_config
+        from repro.engine.devices import get_device
+
+        cfg = get_config("qwen3-4b", reduced=True)
+        shape = ShapeSpec("t", 32, 2, "train")
+        x = cell_features(cfg, shape, (1, 1), get_device("host_cpu"))
+        hist = dict(zip(CLASS_FEATURE_NAMES, x[-len(CLASS_FEATURE_NAMES):]))
+        assert hist["flops_frac_matmul"] == 1.0  # all model flops are matmul
+        assert 0 < hist["hbm_frac_elementwise"] < 1
+        # fractions normalize
+        assert sum(v for k, v in hist.items()
+                   if k.startswith("hbm_frac_")) == pytest.approx(1.0)
+        i = LM_FEATURE_NAMES.index("flops_frac_matmul")
+        assert x[i] == 1.0
+
+    def test_mesh_collective_histogram_nonzero_on_2dev(self):
+        """The analytic class decomposition must expose collectives on a
+        >1-device mesh and none on 1x1 (the mesh-dim validation contract;
+        the compiled-HLO side is tests/test_multidevice.py)."""
+        from repro.campaign.lm_features import LM_FEATURE_NAMES, cell_features
+        from repro.configs.base import ShapeSpec
+        from repro.configs.registry import get_config
+        from repro.engine.devices import get_device
+
+        cfg = get_config("qwen3-4b", reduced=True)
+        shape = ShapeSpec("t", 32, 2, "train")
+        dev = get_device("host_cpu")
+        i_coll = LM_FEATURE_NAMES.index("coll_bytes_dev")
+        one = cell_features(cfg, shape, (1, 1), dev)
+        two = cell_features(cfg, shape, (2, 1), dev)
+        assert one[i_coll] == 0.0
+        assert two[i_coll] > 0.0
+
+    def test_ledger_provider_shares_the_histogram(self):
+        from repro.campaign.lm_features import (
+            CLASS_FEATURE_NAMES,
+            class_histogram,
+            ledger_class_features,
+        )
+
+        classes = {"matmul": {"flops": 75.0, "hbm_bytes": 25.0},
+                   "elementwise": {"flops": 25.0, "hbm_bytes": 75.0}}
+        rec_feats = ledger_class_features({"cost_classes": classes})
+        np.testing.assert_array_equal(rec_feats, class_histogram(classes))
+        d = dict(zip(CLASS_FEATURE_NAMES, rec_feats))
+        assert d["flops_frac_matmul"] == 0.75
+        assert d["hbm_frac_elementwise"] == 0.75
+        # missing breakdown → zeros, not a crash
+        assert ledger_class_features({}).sum() == 0.0
+
+    def test_feature_matrix_ledger_provider(self):
+        from repro.campaign.lm_features import (
+            CLASS_FEATURE_NAMES,
+            feature_matrix,
+        )
+
+        rec = {
+            "arch": "qwen3-4b", "mesh": "1x1", "device": "host_cpu",
+            "reduced": True,
+            "shape": {"name": "t", "seq_len": 32, "global_batch": 2,
+                      "kind": "train"},
+            "cost_classes": {"elementwise": {"flops": 1.0, "hbm_bytes": 9.0},
+                             "matmul": {"flops": 3.0, "hbm_bytes": 1.0}},
+        }
+        n = len(CLASS_FEATURE_NAMES)
+        analytic = feature_matrix([rec])
+        ledgered = feature_matrix([rec], classes_from="ledger")
+        # non-class features identical; class block swapped to the record's
+        np.testing.assert_array_equal(analytic[0, :-n], ledgered[0, :-n])
+        d = dict(zip(CLASS_FEATURE_NAMES, ledgered[0, -n:]))
+        assert d["flops_frac_matmul"] == 0.75
+        with pytest.raises(ValueError, match="classes_from"):
+            feature_matrix([rec], classes_from="nope")

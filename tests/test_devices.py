@@ -102,6 +102,11 @@ def _bumped(spec: DeviceSpec, field: str) -> DeviceSpec:
         return dataclasses.replace(spec, calibrated=not v)
     if field == "alloc_granularity":
         return dataclasses.replace(spec, alloc_granularity=int(v) + 1)
+    if field == "class_coeffs":
+        bumped = dict(v)
+        bumped["cnn_latency"] = {"_intercept": bumped.get(
+            "cnn_latency", {}).get("_intercept", 0.0) + 1e-3}
+        return dataclasses.replace(spec, class_coeffs=bumped)
     return dataclasses.replace(spec, **{field: v * 1.5 + 1e-6})
 
 
@@ -111,6 +116,14 @@ def test_fingerprint_sensitive_to_every_fitted_constant():
         assert _bumped(base, field).fingerprint() != base.fingerprint(), field
     # name and meta are NOT prediction-relevant: same constants, same key
     assert dataclasses.replace(base, name="alias").fingerprint() == base.fingerprint()
+
+
+def test_spec_stays_hashable_with_class_coeffs():
+    # frozen specs are used as set members / dict keys; the class_coeffs
+    # dict must not break the generated __hash__ (eq still covers it)
+    spec = _bumped(get_device("host_cpu"), "class_coeffs")
+    assert spec in {spec}
+    assert spec != get_device("host_cpu")
 
 
 def test_analytical_cache_salt_tracks_device_fingerprint():

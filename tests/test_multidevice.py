@@ -115,6 +115,47 @@ def test_pipeline_parallel_matches_sequential():
     """)
 
 
+def test_campaign_cell_collectives_on_2dev_mesh(tmp_path):
+    """Mesh-dim feature validation (ROADMAP "Next" item): a data-parallel
+    2-device grid lowered through launch/lowering must parse nonzero
+    collective bytes — with collective-class ledger records to match —
+    while the same cell on 1x1 parses exactly zero.  Otherwise every mesh
+    feature the campaign fits on is vacuously zero."""
+    _run("""
+        from repro.campaign.plan import plan_grid
+        from repro.campaign.runner import measure_cell
+
+        results = {}
+        for mesh in ("1x1", "2x1"):
+            plan = plan_grid(archs=("qwen3-4b",),
+                             shapes=("smoke_train_16x2",), meshes=(mesh,))
+            assert len(plan.cells) == 1, (mesh, plan.skipped)
+            # compile-only: collective bytes come from the HLO parse
+            results[mesh] = measure_cell(plan.cells[0], run=False)
+
+        one, two = results["1x1"], results["2x1"]
+        assert one["collective_bytes"] == 0.0, one["collective_bytes"]
+        assert "collective" not in one["cost_classes"]
+        assert two["collective_bytes"] > 0.0
+        assert two["n_devices"] == 2
+
+        # ledger attribution agrees with the scalar: the collective class
+        # carries ALL of it, and the breakdown re-sums exactly
+        classes = two["cost_classes"]
+        coll = sum(s.get("collective_bytes", 0.0) for s in classes.values())
+        assert coll == two["collective_bytes"]
+        assert classes["collective"]["collective_bytes"] == coll
+        assert classes["collective"]["count"] > 0
+        for key in ("flops", "hbm_bytes"):
+            assert sum(s.get(key, 0.0) for s in classes.values()) == two[key]
+
+        # records stamp the device fingerprint the fit-time guard checks
+        from repro.engine.devices import get_device
+        assert two["device_fingerprint"] == get_device("host_cpu").fingerprint()
+        print("OK", two["collective_bytes"])
+    """, n_devices=2)
+
+
 def test_elastic_checkpoint_restore_different_mesh(tmp_path):
     _run(f"""
         import numpy as np, jax, jax.numpy as jnp
