@@ -18,6 +18,11 @@ Runs both benchmarks in-process and enforces:
 * campaign LM-forest accuracy (docs/campaign.md): held-out-cell latency
   MAPE and combined latency+memory MAPE from the campaign-fitted forest
   beat the uncalibrated analytical path on the host-CPU smoke grid,
+* serving (docs/serve.md): on the seeded mixed-length Poisson trace the
+  continuous-batching engine sustains at least the lockstep engine's
+  req/s at equal ``n_slots`` (speedup ≥ ``SERVE_SPEEDUP_MIN``), records
+  finite p50/p99 TTFT and per-token latency, its goodput is never worse,
+  and the paged KV pool is smaller than the dense cache it replaced,
 * per kernel (incl. the moe_dispatch model), the autotuned config's
   modelled roofline time is never worse than the hand-coded default (the
   default is a candidate, so any violation means the cost model or
@@ -42,6 +47,7 @@ PARITY_TOL = 1e-9   # packed-forest float accumulation order (≈1e-14 observed)
 # at smoke scale).
 LEDGER_PARITY_RTOL = 1e-9
 CAMPAIGN_GAMMA_MAPE_MAX = 0.50  # sanity bound on the LM forest's memory error
+SERVE_SPEEDUP_MIN = 1.0         # continuous must never lose to lockstep
 
 
 def main() -> int:
@@ -109,6 +115,31 @@ def main() -> int:
                   f"{camp['hlo_phi_mape_aggregate']:.3f}")
     else:
         print("SKIP campaign accuracy (smoke grid too sparse)")
+
+    # Serving: continuous batching vs lockstep on the seeded open-loop
+    # trace (ISSUE 6 acceptance) — never worse on sustained req/s or
+    # goodput, latency percentiles recorded and finite, paged pool
+    # strictly smaller than the dense cache it replaced.
+    import math
+
+    from . import serve_bench
+
+    srv = serve_bench.run()
+    check(srv["speedup"] >= SERVE_SPEEDUP_MIN,
+          f"serve continuous {srv['continuous_rps']:.2f} req/s >= lockstep "
+          f"{srv['lockstep_rps']:.2f} req/s "
+          f"(speedup {srv['speedup']:.2f}x >= {SERVE_SPEEDUP_MIN}x)")
+    check(all(math.isfinite(srv[k]) and srv[k] > 0 for k in
+              ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms", "tpot_p99_ms")),
+          f"serve latency percentiles recorded "
+          f"(ttft p50/p99 {srv['ttft_p50_ms']:.2f}/{srv['ttft_p99_ms']:.2f}ms, "
+          f"tpot p50/p99 {srv['tpot_p50_ms']:.2f}/{srv['tpot_p99_ms']:.2f}ms)")
+    check(srv["goodput_continuous"] >= srv["goodput_lockstep"],
+          f"serve goodput continuous {srv['goodput_continuous']:.2f} >= "
+          f"lockstep {srv['goodput_lockstep']:.2f} req/s")
+    check(srv["kv_bytes"] < srv["kv_dense_bytes"],
+          f"paged KV pool {srv['kv_bytes'] / 1e6:.3g}MB < dense "
+          f"{srv['kv_dense_bytes'] / 1e6:.3g}MB (block={srv['block_size']})")
 
     kern = kernel_bench.run()
     for name in ("conv_mm", "flash_attention", "ssm_scan", "moe_dispatch"):

@@ -1,0 +1,191 @@
+"""Open-loop serving benchmark: continuous batching vs lockstep generate.
+
+Replays one synthetic Poisson arrival trace (seeded: mixed prompt
+lengths, mixed token budgets) through both engines at equal ``n_slots``
+and reports, per engine, sustained requests/sec plus the continuous
+engine's p50/p99 TTFT and per-token latency.  The lockstep baseline is
+``ServeEngine.generate`` driven the only way a lockstep server can be:
+grab up to ``n_slots`` arrived requests, decode until the *longest*
+finishes, return the batch — short requests hold their slots, which is
+exactly the idle time continuous batching reclaims.
+
+Methodology (docs/serve.md):
+
+* open-loop — arrivals follow the trace's wall-clock offsets whether or
+  not the server keeps up, so queueing delay lands in TTFT;
+* each engine runs the trace twice on one instance and the second pass
+  is measured (first pass owns every jit trace: prefill buckets, decode
+  table widths, the lockstep batch shapes);
+* lockstep TTFT is batch-completion-based (the engine returns whole
+  batches), which flatters nobody: it is reported, while the gate in
+  ``check_thresholds.py`` compares sustained req/s and requires the
+  continuous engine to be never worse;
+* goodput = finished requests whose end-to-end per-output-token latency
+  met ``GOODPUT_TPOT_MS``, per second of wall clock.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.kernels.autotune import KernelTuner
+from repro.models import transformer as T
+from repro.serve import (
+    ContinuousConfig,
+    ContinuousEngine,
+    Request,
+    ServeConfig,
+    ServeEngine,
+)
+
+from .common import csv_line
+
+MAX_LEN = 64
+N_SLOTS = 4
+N_REQUESTS = 12
+RATE_RPS = 30.0                # arrival intensity (keeps the cell loaded)
+PROMPT_LENS = (5, 9, 13)       # few distinct widths → few lockstep traces
+MAX_NEW = (4, 24)              # mixed budgets: what lockstep pads away
+GOODPUT_TPOT_MS = 500.0        # host-CPU smoke scale
+TUNING_CACHE = "/tmp/perf4sight_serve_bench_tuning.json"
+
+
+def make_trace(seed: int = 0, n: int = N_REQUESTS, rate: float = RATE_RPS):
+    """[(arrival_s, prompt, max_new)] with Poisson (exponential-gap)
+    arrivals — the same seed replays the same trace for both engines."""
+    rng = np.random.default_rng(seed)
+    t, trace = 0.0, []
+    vocab_lo, vocab_hi = 2, 128
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        plen = int(rng.choice(PROMPT_LENS))
+        prompt = rng.integers(vocab_lo, vocab_hi, (plen,)).astype(np.int32)
+        trace.append((t, prompt, int(MAX_NEW[i % len(MAX_NEW)])))
+    return trace
+
+
+# ---------------------------------------------------------------------------
+
+
+def run_lockstep(eng: ServeEngine, trace) -> dict:
+    start = time.perf_counter()
+    done, i = [], 0
+    while i < len(trace):
+        now = time.perf_counter() - start
+        if trace[i][0] > now:
+            time.sleep(trace[i][0] - now)
+            now = time.perf_counter() - start
+        n_due = sum(1 for a, _, _ in trace[i:] if a <= now)
+        batch = trace[i: i + min(max(n_due, 1), eng.scfg.n_slots)]
+        i += len(batch)
+        out = eng.generate([p for _, p, _ in batch],
+                           max_new_tokens=max(m for _, _, m in batch))
+        t_done = time.perf_counter() - start
+        for j, (arrival, _, _) in enumerate(batch):
+            done.append({"latency_s": t_done - arrival,
+                         "tokens": int(out["token_counts"][j])})
+    wall = time.perf_counter() - start
+    return {"wall_s": wall, "done": done}
+
+
+def run_continuous(ce: ContinuousEngine, trace) -> dict:
+    start = time.perf_counter()
+    i = 0
+    while i < len(trace) or not ce.idle:
+        now = time.perf_counter() - start
+        while i < len(trace) and trace[i][0] <= now:
+            arrival, prompt, max_new = trace[i]
+            req = Request(prompt=prompt, max_new_tokens=max_new)
+            req.t_arrival = start + arrival
+            ce.submit(req)
+            i += 1
+        if ce.idle and i < len(trace):
+            time.sleep(max(0.0, trace[i][0] - now))
+            continue
+        ce.step()
+    return {"wall_s": time.perf_counter() - start}
+
+
+def _goodput(latencies_per_token_ms, wall_s: float) -> float:
+    met = sum(1 for t in latencies_per_token_ms if t <= GOODPUT_TPOT_MS)
+    return met / wall_s if wall_s > 0 else 0.0
+
+
+def run(print_fn=print, seed: int = 0) -> dict:
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    params = T.init_params(cfg, 0)
+    trace = make_trace(seed)
+
+    lock = ServeEngine(cfg, params, ServeConfig(
+        max_len=MAX_LEN, n_slots=N_SLOTS, eos_id=0))
+    tuner = KernelTuner(cache=TUNING_CACHE)
+    cont = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=MAX_LEN, n_slots=N_SLOTS, eos_id=0), tuner=tuner)
+
+    # pass 1 warms every jit trace; pass 2 is measured
+    run_lockstep(lock, trace)
+    lk = run_lockstep(lock, trace)
+
+    run_continuous(cont, trace)
+    cont.finished.clear()
+    cont.refused.clear()
+    cont.decode_steps = 0
+    ct = run_continuous(cont, trace)
+    m = cont.metrics()
+    assert m["finished"] == len(trace) and m["refused"] == 0
+
+    lock_rps = len(lk["done"]) / lk["wall_s"]
+    cont_rps = m["finished"] / ct["wall_s"]
+    speedup = cont_rps / lock_rps
+
+    lock_tpot = [1e3 * d["latency_s"] / max(d["tokens"], 1)
+                 for d in lk["done"]]
+    cont_tpot = [1e3 * (r.t_finished - r.t_arrival) / max(r.n_generated, 1)
+                 for r in cont.finished]
+
+    out = {
+        "lockstep_rps": lock_rps,
+        "continuous_rps": cont_rps,
+        "speedup": speedup,
+        "ttft_p50_ms": m["ttft_p50_ms"],
+        "ttft_p99_ms": m["ttft_p99_ms"],
+        "tpot_p50_ms": m["tpot_p50_ms"],
+        "tpot_p99_ms": m["tpot_p99_ms"],
+        "goodput_lockstep": _goodput(lock_tpot, lk["wall_s"]),
+        "goodput_continuous": _goodput(cont_tpot, ct["wall_s"]),
+        "kv_bytes": m["kv_bytes"],
+        "kv_dense_bytes": m["kv_dense_bytes"],
+        "block_size": m["block_size"],
+        "n_requests": len(trace),
+    }
+    print_fn(csv_line("serve/lockstep_rps", lock_rps,
+                      f"n={len(trace)} slots={N_SLOTS}"))
+    print_fn(csv_line("serve/continuous_rps", cont_rps,
+                      f"speedup={speedup:.2f}x"))
+    print_fn(csv_line("serve/ttft_p50_ms", out["ttft_p50_ms"], "continuous"))
+    print_fn(csv_line("serve/ttft_p99_ms", out["ttft_p99_ms"], "continuous"))
+    print_fn(csv_line("serve/tpot_p50_ms", out["tpot_p50_ms"], "continuous"))
+    print_fn(csv_line("serve/tpot_p99_ms", out["tpot_p99_ms"], "continuous"))
+    print_fn(csv_line("serve/goodput_lockstep_rps", out["goodput_lockstep"],
+                      f"tpot<= {GOODPUT_TPOT_MS}ms"))
+    print_fn(csv_line("serve/goodput_continuous_rps",
+                      out["goodput_continuous"],
+                      f"tpot<= {GOODPUT_TPOT_MS}ms"))
+    print_fn(csv_line("serve/kv_pool_mb", out["kv_bytes"] / 1e6,
+                      f"dense={out['kv_dense_bytes'] / 1e6:.3g}MB "
+                      f"block={out['block_size']}"))
+    return out
+
+
+if __name__ == "__main__":
+    if os.path.exists(TUNING_CACHE):
+        os.unlink(TUNING_CACHE)
+    out = run()
+    print(f"\ncontinuous vs lockstep speedup: {out['speedup']:.2f}x "
+          f"(gate >= 1.0)")

@@ -100,6 +100,35 @@ class CostEngine:
     def estimate_one(self, query: CostQuery) -> CostEstimate:
         return self.estimate([query])[0]
 
+    def estimate_requests(
+        self,
+        arch: str,
+        lens: list[int],
+        *,
+        stage: str = "infer",
+        reduced: bool = False,
+        bs: int = 1,
+        bucket: int = 64,
+    ) -> list[CostEstimate]:
+        """One estimate per serving request, bucketed to stay cacheable.
+
+        Ragged request lengths would make every admission a distinct
+        query; rounding each length up to a ``bucket`` multiple collapses
+        them onto a handful of (bs, seq) cells, so a serving scheduler
+        pricing thousands of arrivals issues (and caches) only as many
+        backend calls as there are occupied buckets.  Estimates fan back
+        out in request order.
+        """
+        bucket = max(1, int(bucket))
+        seqs = [max(bucket, -(-int(L) // bucket) * bucket) for L in lens]
+        uniq = sorted(set(seqs))
+        ests = self.estimate([
+            CostQuery(arch=arch, bs=bs, seq=s, stage=stage, reduced=reduced)
+            for s in uniq
+        ])
+        by_seq = dict(zip(uniq, ests))
+        return [by_seq[s] for s in seqs]
+
     def admit(
         self,
         query: CostQuery,

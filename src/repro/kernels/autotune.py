@@ -167,6 +167,7 @@ _BUILTIN_MODULES = (
     "repro.kernels.flash_attention.tiling",
     "repro.kernels.ssm_scan.tiling",
     "repro.kernels.moe_dispatch.tiling",
+    "repro.kernels.serve_kv.tiling",
 )
 
 

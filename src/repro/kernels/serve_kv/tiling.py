@@ -1,0 +1,83 @@
+"""Tiling search space + static cost model for the paged serve KV cache.
+
+The serving engine stores K/V in fixed-size blocks (``PagedKVCache``);
+every decode step gathers each slot's block list back into a contiguous
+view and attends over it.  ``block_size`` is the one knob, and it trades
+two costs the roofline ranker can see:
+
+* **internal fragmentation** — a sequence of length ``ctx`` occupies
+  ``ceil(ctx/bs)·bs`` pool tokens, so the gather streams on average an
+  extra ``bs/2`` tokens of dead K/V per slot per step (HBM bytes grow
+  with ``bs``);
+* **gather/step overhead** — each block is one scatter/gather descriptor,
+  so per-step sequenced work scales with ``ceil(ctx/bs)`` per slot
+  (``n_steps`` shrinks with ``bs``), and tiny blocks starve the MXU
+  (``mxu_min_dim``).
+
+Costs are modelled at the expected steady-state occupancy ``max_len/2``
+(uniform admission over the context window), matching how the serve
+bench exercises mixed-length traces.
+"""
+
+from __future__ import annotations
+
+from repro.kernels.autotune import (
+    KernelCost,
+    TilingModel,
+    bytes_per_element,
+    register_tiling,
+)
+
+__all__ = ["shape_key", "candidates", "cost", "default"]
+
+_BLOCK_SEEDS = (16, 32, 64, 128, 256, 512)
+
+
+def shape_key(n_slots: int, max_len: int, n_kv_heads: int, head_dim: int,
+              dtype) -> dict:
+    return {"B": int(n_slots), "L": int(max_len), "Hkv": int(n_kv_heads),
+            "Dh": int(head_dim), "dtype": str(dtype)}
+
+
+def candidates(shape: dict) -> list[dict]:
+    cands = [{"block_size": b} for b in _BLOCK_SEEDS if b <= shape["L"]]
+    return cands or [{"block_size": shape["L"]}]
+
+
+def default(shape: dict) -> dict:
+    # dense-cache parity: one block spans a quarter of the window, the
+    # hand-picked constant the engine used before the pool existed
+    return {"block_size": max(16, min(shape["L"] // 4, 256))}
+
+
+def cost(shape: dict, config: dict) -> KernelCost:
+    B, L = shape["B"], shape["L"]
+    Hkv, Dh = shape["Hkv"], shape["Dh"]
+    bs = max(1, min(int(config.get("block_size", L)), L))
+    bpe = bytes_per_element(shape["dtype"])
+
+    ctx = L / 2.0                      # expected steady-state occupancy
+    padded = ctx + bs / 2.0            # + mean fragmentation per slot
+    n_blocks = max(1, -(-int(ctx) // bs))
+    # decode-step attention over the gathered view: qk^T + pv
+    flops = 4.0 * B * Hkv * padded * Dh
+    # K/V streamed once per step (incl. dead fragmentation tokens), the
+    # step's own k/v written once, block tables re-read every step
+    hbm = (bpe * 2.0 * B * padded * Hkv * Dh
+           + bpe * 2.0 * B * Hkv * Dh
+           + 4.0 * B * n_blocks)
+    vmem = (bpe * 2.0 * bs * Hkv * Dh   # one K and one V block resident
+            + 4.0 * bs                   # f32 score strip for the block
+            + 4.0 * Dh)                  # f32 accumulator row
+    return KernelCost(
+        op="serve_kv", op_class="matmul", origin="kernel",
+        flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
+        n_steps=B * n_blocks,
+        mxu_min_dim=min(bs, Dh),
+    )
+
+
+register_tiling(TilingModel(
+    name="serve_kv", candidates=candidates, cost=cost, default=default,
+    runner=None,
+), overwrite=True)

@@ -178,9 +178,15 @@ def rope(x, positions, theta: float):
 
 
 def _mask_bias(q_pos, k_pos, kind: str, chunk: int, prefix: int, kv_len=None):
-    """Additive mask bias (0 or -inf).  q_pos: (Sq,), k_pos: (Sk,)."""
-    q = q_pos[:, None]
-    k = k_pos[None, :]
+    """Additive mask bias (0 or -inf).
+
+    q_pos: (Sq,) or (B, Sq); k_pos: (Sk,) or (B, Sk) — leading batch dims
+    broadcast, so ragged (per-row) positions yield a (B, Sq, Sk) bias.
+    Negative key positions mark left-padding slots and are always masked
+    out.  ``kv_len`` may be a scalar or a per-row (B,) vector.
+    """
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
     if kind == "causal":
         ok = k <= q
     elif kind == "chunked":  # causal within a local chunk window
@@ -191,8 +197,13 @@ def _mask_bias(q_pos, k_pos, kind: str, chunk: int, prefix: int, kv_len=None):
         ok = jnp.ones_like(k <= q)
     else:
         raise ValueError(kind)
+    if kind != "full":
+        ok = ok & (k >= 0)  # left-padding slots carry negative positions
     if kv_len is not None:  # decode: only attend to valid cache entries
-        ok = ok & (k <= kv_len)
+        kv = jnp.asarray(kv_len)
+        if kv.ndim:
+            kv = kv[..., None, None]
+        ok = ok & (k <= kv)
     return jnp.where(ok, 0.0, _NEG_INF).astype(jnp.float32)
 
 
@@ -219,10 +230,14 @@ def blocked_attention(
     if block_q is None:
         block_q = _tuned_attention_block_q(qr, k, mask_kind != "full")
 
+    def expand(bias):
+        # (B, Sq, Sk) per-row bias → broadcast over (G, R); 2-D passes through
+        return bias[:, None, None] if bias.ndim == 3 else bias
+
     if Sq <= block_q:
         bias = _mask_bias(q_positions, k_positions, mask_kind, chunk, prefix, kv_len)
         s = jnp.einsum("bqgrd,bkgd->bgrqk", qr, k, preferred_element_type=jnp.float32)
-        s = s + bias  # (B, G, R, Sq, Sk)
+        s = s + expand(bias)  # (B, G, R, Sq, Sk)
         p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
         o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v)
         return o.reshape(B, Sq, H, Dh)
@@ -231,15 +246,20 @@ def blocked_attention(
     pad = nb * block_q - Sq
     if pad:
         qr = jnp.pad(qr, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
-        q_positions = jnp.pad(q_positions, (0, pad))
+        # padded query rows are sliced off below; their positions are junk
+        q_positions = jnp.pad(q_positions, [(0, 0)] * (q_positions.ndim - 1)
+                              + [(0, pad)])
     qb = qr.reshape(B, nb, block_q, Hkv, rep, Dh).transpose(1, 0, 2, 3, 4, 5)
-    pb = q_positions.reshape(nb, block_q)
+    if q_positions.ndim == 2:  # ragged: per-row positions ride along per block
+        pb = q_positions.reshape(B, nb, block_q).transpose(1, 0, 2)
+    else:
+        pb = q_positions.reshape(nb, block_q)
 
     def body(_, blk):
         qblk, qpos = blk
         bias = _mask_bias(qpos, k_positions, mask_kind, chunk, prefix, kv_len)
         s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, k, preferred_element_type=jnp.float32)
-        s = s + bias
+        s = s + expand(bias)
         p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
         o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v)
         return None, o
@@ -253,13 +273,24 @@ def attention_block(
     x, p, cfg, *,
     positions,
     mask_kind: str,
-    cache=None,          # (k_cache, v_cache): (B, Smax, Hkv, Dh) or None
-    cache_len=None,      # int32 scalar: current cache fill
+    cache=None,          # (k_cache, v_cache): (B, Smax, Hkv, Dh) or None,
+    #                      or a paged pool {"k_pool","v_pool"}: (P, bs, Hkv, Dh)
+    cache_len=None,      # int32 scalar OR per-row (B,) vector: cache fill
     kv_source=None,      # cross-attention memory (B, Sm, D)
+    pos_offset=None,     # (B,) left-padding per row (ragged prompts)
+    block_table=None,    # (B, NB) logical→physical block map (paged cache)
 ):
     """Full attention sublayer: projections + RoPE + blocked attention.
 
     Returns (out, new_cache).  ``p`` holds wq/wk/wv/wo (+q_norm/k_norm/biases).
+
+    Ragged support: ``positions`` may be per-row (B, S) with negative values
+    marking left-padding (masked out of the keys, clamped for RoPE), and
+    ``cache_len`` may be a per-row vector — decode slots at different fill
+    levels write their new KV at per-row offsets (continuous batching).
+    With a paged cache, K/V live in a fixed-size block pool indexed through
+    ``block_table``; the step scatters the new token's KV into its block
+    and attends over the gathered logical view (decode, S == 1, only).
     """
     B, S, D = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
@@ -277,20 +308,52 @@ def attention_block(
         k = rms_norm(k, p["k_norm"])
 
     if kv_source is None:  # self-attention: RoPE on q and k
-        q = rope(q, positions, cfg.rope_theta)
-        k = rope(k, positions, cfg.rope_theta)
+        rope_pos = jnp.maximum(positions, 0)  # pad slots: masked, not rotated
+        q = rope(q, rope_pos, cfg.rope_theta)
+        k = rope(k, rope_pos, cfg.rope_theta)
         if cache is None:
             k_pos = positions
             new_cache = None
             kv_len = None
             k_full, v_full = k, v
+        elif "k_pool" in cache:
+            # Paged decode: scatter the new token's KV into its block, then
+            # attend over the gathered (B, NB·bs) logical view.  Slot i's
+            # token lands at logical position cache_len[i] = physical
+            # (block_table[i, len//bs], len % bs).
+            assert S == 1, "paged KV cache is a single-token decode path"
+            kp, vp = cache["k_pool"], cache["v_pool"]
+            bs_blk = kp.shape[1]
+            blk = cache_len // bs_blk
+            off = cache_len % bs_blk
+            rows = jnp.arange(B)
+            phys = block_table[rows, blk]                     # (B,)
+            kp = kp.at[phys, off].set(k[:, 0].astype(kp.dtype))
+            vp = vp.at[phys, off].set(v[:, 0].astype(vp.dtype))
+            new_cache = {"k_pool": kp, "v_pool": vp}
+            k_full = kp[block_table].reshape(B, -1, Hkv, Dh)  # (B, NB·bs, ·)
+            v_full = vp[block_table].reshape(B, -1, Hkv, Dh)
+            k_pos = jnp.arange(k_full.shape[1])
+            kv_len = cache_len + S - 1                        # (B,)
         else:
             kc, vc = cache["k"], cache["v"]
             k_pos = jnp.arange(kc.shape[1])
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cache_len, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cache_len, axis=1)
+            if jnp.ndim(cache_len):
+                # per-row fill (continuous batching): each slot writes its
+                # single new token at its own offset
+                assert S == 1, "per-row cache_len is a single-token decode path"
+                kc = kc.at[jnp.arange(B), cache_len].set(k[:, 0].astype(kc.dtype))
+                vc = vc.at[jnp.arange(B), cache_len].set(v[:, 0].astype(vc.dtype))
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), cache_len, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), cache_len, axis=1)
             new_cache = {"k": kc, "v": vc}
             kv_len = cache_len + S - 1
+            if pos_offset is not None:
+                # left-padded rows: cache slot j holds logical position
+                # j - pad, pad slots (< 0) masked out by _mask_bias
+                k_pos = k_pos[None, :] - pos_offset[:, None]
+                kv_len = kv_len - pos_offset
             k_full, v_full = kc, vc
     else:  # cross-attention: no RoPE, full mask over memory
         k_pos = jnp.arange(src.shape[1])
@@ -494,10 +557,13 @@ def ssd_scan(xh, a, Bm, Cm, chunk: int, initial_state=None):
     return y.astype(xh.dtype), final_state
 
 
-def ssd_block(x, p, cfg, *, cache=None):
+def ssd_block(x, p, cfg, *, cache=None, valid=None):
     """Mamba-2 block: in_proj → causal conv1d → SSD → gated norm → out_proj.
 
     cache (decode): dict(conv=(B, W-1, d_conv_ch), state=(B, H, P, N)).
+    ``valid`` (B, S) bool marks real tokens in a left-padded ragged batch:
+    invalid steps contribute zero conv taps, zero state input and unit
+    decay (a = 0), so the recurrence matches an unpadded run exactly.
     Returns (out, new_cache).
     """
     B, S, D = x.shape
@@ -516,6 +582,8 @@ def ssd_block(x, p, cfg, *, cache=None):
          jnp.einsum("bsd,de->bse", x, p["w_C"])], axis=-1)
     dt = jnp.einsum("bsd,de->bse", x, p["w_dt"])
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if valid is not None:  # pad steps feed zero taps into the causal conv
+        xbc = jnp.where(valid[..., None], xbc, 0)
 
     # causal depthwise conv over (x, B, C) channels
     if cache is None:
@@ -536,6 +604,9 @@ def ssd_block(x, p, cfg, *, cache=None):
     A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,), negative
     a = dt * A                                                 # (B,S,H) log-decay
     xh = xs * dt[..., None].astype(xs.dtype)
+    if valid is not None:  # pad steps: no state input, unit decay
+        xh = jnp.where(valid[..., None, None], xh, 0)
+        a = jnp.where(valid[..., None], a, 0.0)
 
     ssm_chunk = (_tuned_ssm_chunk(xh, N, cfg.ssm_chunk)
                  if S > 1 else cfg.ssm_chunk)

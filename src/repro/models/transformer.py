@@ -48,6 +48,8 @@ __all__ = [
     "decode_step",
     "cache_specs",
     "init_cache",
+    "paged_cache_shapes",
+    "init_paged_cache",
     "input_specs",
     "warm_autotune",
 ]
@@ -222,8 +224,17 @@ def _run_stack(
     blocks, x, cfg, plan, *,
     positions, mask_kind, memory=None,
     cache=None, cache_len=None, want_cache=False, remat=True,
+    pos_offset=None, block_table=None,
 ):
-    """Scan the (stacked) blocks over x.  Returns (x, aux_loss, new_cache)."""
+    """Scan the (stacked) blocks over x.  Returns (x, aux_loss, new_cache).
+
+    ``pos_offset`` (B,) marks left-padding per row (ragged prompts):
+    attention masks the pad slots, SSD mixers treat them as zero-input
+    unit-decay steps.  ``block_table`` routes attention K/V through a
+    paged block pool (see :func:`paged_cache_shapes`).
+    """
+    # per-row validity for SSD mixers: pad positions carry negatives
+    ssm_valid = positions >= 0 if positions.ndim == 2 else None
 
     def body(carry, inp):
         x, aux = carry
@@ -237,6 +248,7 @@ def _run_stack(
                 mo, nc = attention_block(
                     h, sp["attn"], cfg, positions=positions, mask_kind=mask_kind,
                     cache=sc, cache_len=cache_len,
+                    pos_offset=pos_offset, block_table=block_table,
                 )
                 x = x + mo
                 if mixer == "attn_cross":
@@ -247,7 +259,7 @@ def _run_stack(
                     )
                     x = x + co
             else:
-                mo, nc = ssd_block(h, sp["ssm"], cfg, cache=sc)
+                mo, nc = ssd_block(h, sp["ssm"], cfg, cache=sc, valid=ssm_valid)
                 x = x + mo
             if new_lc is not None:
                 new_lc[f"sub{i}"] = nc
@@ -281,7 +293,10 @@ def _prefill_like(cfg, params, batch, *, max_len, want_cache):
     """Shared forward: embeddings → stack → final norm.  Used by training
     (want_cache=False) and prefill (want_cache=True, cache written).
 
-    batch: tokens (B,S) int32 [+ patches (B,P,D) | frames (B,F,D)].
+    batch: tokens (B,S) int32 [+ patches (B,P,D) | frames (B,F,D)
+    | pos_offset (B,)].  ``pos_offset`` marks per-row left-padding (ragged
+    prompts): positions become per-row, pad slots carry negatives and are
+    masked out of attention keys / SSD state updates.
     """
     n_scan, plan = layer_plan(cfg)
     tokens = batch["tokens"]
@@ -291,6 +306,11 @@ def _prefill_like(cfg, params, batch, *, max_len, want_cache):
         x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
     S_total = x.shape[1]
     positions = jnp.arange(S_total)
+    pos_offset = batch.get("pos_offset")
+    if pos_offset is not None:
+        assert not cfg.n_prefix and not cfg.n_encoder_layers, \
+            "ragged (left-padded) prompts need a plain self-attention stack"
+        positions = positions[None, :] - pos_offset[:, None]  # (B, S_total)
 
     memory = None
     if cfg.n_encoder_layers:
@@ -312,6 +332,7 @@ def _prefill_like(cfg, params, batch, *, max_len, want_cache):
         params["blocks"], x, cfg, plan,
         positions=positions, mask_kind=_mask_kind(cfg), memory=memory,
         cache=cache, cache_len=cache_len, want_cache=want_cache,
+        pos_offset=pos_offset,
     )
     x = rms_norm(x, params["final_norm"])
     return x, aux, new_cache, memory
@@ -395,16 +416,36 @@ def prefill(params, batch, cfg: ArchConfig, *, max_len: int | None = None):
 
 
 def decode_step(params, cache, batch, cfg: ArchConfig):
-    """One-token decode.  batch: tokens (B,1), cache_len (), [memory]."""
+    """One-token decode.  batch: tokens (B,1), cache_len (), [memory].
+
+    Ragged / continuous-batching extensions (serve path):
+
+    * ``cache_len`` may be a per-row (B,) vector — slots at different fill
+      levels decode together, each writing its new KV at its own offset;
+    * ``pos_offset`` (B,) shifts per-row positions for left-padded prompts
+      (legacy ``generate`` ragged mode);
+    * ``block_table`` (B, NB) routes K/V through a paged block pool
+      (``cache`` then holds ``k_pool``/``v_pool`` leaves, see
+      :func:`paged_cache_shapes`).
+    """
     n_scan, plan = layer_plan(cfg)
     tokens, cache_len = batch["tokens"], batch["cache_len"]
+    pos_offset = batch.get("pos_offset")
     x = jnp.take(params["embed"], tokens, axis=0)
-    positions = cache_len + jnp.arange(x.shape[1])
+    steps = jnp.arange(x.shape[1])
+    if jnp.ndim(cache_len) or pos_offset is not None:
+        cl = jnp.broadcast_to(jnp.asarray(cache_len), (tokens.shape[0],))
+        if pos_offset is not None:
+            cl = cl - pos_offset
+        positions = cl[:, None] + steps[None, :]             # (B, S)
+    else:
+        positions = cache_len + steps
     x, _, new_cache = _run_stack(
         params["blocks"], x, cfg, plan,
         positions=positions, mask_kind=_mask_kind(cfg),
         memory=batch.get("memory"), cache=cache, cache_len=cache_len,
         want_cache=False, remat=False,
+        pos_offset=pos_offset, block_table=batch.get("block_table"),
     )
     x = rms_norm(x, params["final_norm"])
     return _logits(cfg, params, x), new_cache
@@ -462,6 +503,37 @@ def init_cache(cfg: ArchConfig, B: int, max_len: int, *, dtype=DTYPE,
 
     return jax.tree_util.tree_map_with_path(
         mk, cache_shapes(cfg, B, max_len), is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def paged_cache_shapes(cfg: ArchConfig, n_blocks: int, block_size: int) -> dict:
+    """Shapes of the paged KV block pool (the serve path's cache layout).
+
+    Each self-attention sublayer stores K/V in a pool of ``n_blocks``
+    fixed-size blocks of ``block_size`` tokens; a per-slot block table maps
+    logical positions to physical blocks (``decode_step``'s
+    ``block_table``).  Pool capacity is a *budget*, not ``n_slots ×
+    max_len`` — long-context configs no longer allocate dense caches they
+    never fill.  Physical block 0 is reserved as scratch for idle slots.
+    """
+    n_scan, plan = layer_plan(cfg)
+    out = {}
+    for i, (mixer, _) in enumerate(plan):
+        if mixer != "attn":
+            raise ValueError(
+                f"paged KV cache needs a pure self-attention stack; "
+                f"{cfg.name} has a {mixer!r} mixer (use the dense cache)")
+        s = (n_scan, n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim_)
+        out[f"sub{i}"] = {"k_pool": s, "v_pool": s}
+    return out
+
+
+def init_paged_cache(cfg: ArchConfig, n_blocks: int, block_size: int) -> dict:
+    """Zero-filled device block pool (see :func:`paged_cache_shapes`)."""
+    return jax.tree.map(
+        lambda s: jnp.zeros(s, DTYPE),
+        paged_cache_shapes(cfg, n_blocks, block_size),
+        is_leaf=lambda x: isinstance(x, tuple),
     )
 
 

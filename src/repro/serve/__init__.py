@@ -1,0 +1,40 @@
+"""Serving engines over the cost-prediction stack (see docs/serve.md).
+
+Two engines share the model stack and the admission gate:
+
+* :class:`ServeEngine` — the lockstep baseline: one batch prefills
+  together and decodes until every member finishes.
+* :class:`ContinuousEngine` — continuous batching: requests queue,
+  are priced per admission by the :class:`SLOScheduler` through the
+  ``CostEngine`` forest→analytical chain, prefill individually into free
+  slots, and decode raggedly out of a :class:`PagedKVCache` block pool
+  whose block size comes from the kernel autotuner's ``serve_kv`` tiling
+  model.
+"""
+
+from repro.serve.continuous import ContinuousConfig, ContinuousEngine
+from repro.serve.engine import ServeConfig, ServeEngine, pad_ragged
+from repro.serve.kv_cache import PagedKVCache, resolve_block_size
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import (
+    Decision,
+    PlacementRefused,
+    ServeSLO,
+    SLOScheduler,
+)
+
+__all__ = [
+    "ContinuousConfig",
+    "ContinuousEngine",
+    "Decision",
+    "PagedKVCache",
+    "PlacementRefused",
+    "Request",
+    "RequestState",
+    "SLOScheduler",
+    "ServeConfig",
+    "ServeEngine",
+    "ServeSLO",
+    "pad_ragged",
+    "resolve_block_size",
+]

@@ -1,0 +1,281 @@
+"""Continuous-batching serve engine over the paged KV cache.
+
+The lockstep ``ServeEngine.generate`` admits one batch and holds every
+slot hostage until the longest member finishes.  Here slots join and
+leave the running batch *every step*:
+
+* arrivals queue in ``submit`` and are priced by the
+  :class:`~repro.serve.scheduler.SLOScheduler` (cost-model admission —
+  REFUSE attaches a :class:`PlacementRefused` to the request);
+* admitted requests prefill **individually** into a free slot (B=1 at a
+  power-of-two bucketed length, left-padded) while other slots keep
+  decoding — the prefill/decode split;
+* the KV lands in the block pool (:class:`PagedKVCache`), and one jitted
+  ragged decode advances *all* occupied slots with per-row
+  ``cache_len`` + block tables;
+* EOS / token-budget completion frees the slot and its blocks
+  immediately for the next arrival.
+
+Shape stability: prefill retraces once per prompt-length bucket, decode
+once per power-of-two block-table width — a long-lived engine compiles
+O(log max_len) functions total, independent of traffic.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import Decision, ServeSLO, SLOScheduler
+
+__all__ = ["ContinuousConfig", "ContinuousEngine"]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclass
+class ContinuousConfig:
+    max_len: int = 512
+    n_slots: int = 8
+    temperature: float = 0.0
+    eos_id: int = 1
+    seed: int = 0
+    block_size: int | None = None     # None → serve_kv tiling via TuningCache
+    pool_tokens: int | None = None    # None → n_slots·max_len / 2 budget
+    gamma_budget_mb: float | None = None
+    safety_margin: float = 0.1
+    slo: ServeSLO = field(default_factory=ServeSLO)
+
+
+class ContinuousEngine:
+    def __init__(self, cfg: ArchConfig, params,
+                 scfg: ContinuousConfig | None = None, *,
+                 cost_engine=None, tuner=None):
+        self.cfg = cfg
+        self.scfg = scfg = scfg or ContinuousConfig()
+        self.params = params
+        self.kv = PagedKVCache(
+            cfg, n_slots=scfg.n_slots, max_len=scfg.max_len,
+            block_size=scfg.block_size, pool_tokens=scfg.pool_tokens,
+            tuner=tuner)
+        self.scheduler = None
+        if cost_engine is not None:
+            self.scheduler = SLOScheduler(
+                cfg, cost_engine,
+                max_len=scfg.max_len, n_slots=scfg.n_slots,
+                gamma_budget_mb=scfg.gamma_budget_mb,
+                safety_margin=scfg.safety_margin, slo=scfg.slo)
+
+        self.queue: deque[Request] = deque()
+        self.slots: list[Request | None] = [None] * scfg.n_slots
+        self.finished: list[Request] = []
+        self.refused: list[Request] = []
+        self._cache_len = np.zeros(scfg.n_slots, np.int64)
+        self._last_tok = np.zeros(scfg.n_slots, np.int32)
+        self._step = 0
+        self.decode_steps = 0
+
+        self._key = jax.random.PRNGKey(scfg.seed)
+        temp = float(scfg.temperature)
+
+        def sample(logits, key):
+            z = logits[:, -1].astype(jnp.float32)
+            if temp <= 0:
+                return jnp.argmax(z, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(key, z / temp, axis=-1).astype(
+                jnp.int32)
+
+        self._sample = jax.jit(sample)
+        self._prefills: dict[int, object] = {}
+        self._decodes: dict[int, object] = {}
+
+    # ------------------------------------------------------------------
+
+    @property
+    def n_running(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.n_running == 0
+
+    def submit(self, request: Request) -> Request:
+        self.queue.append(request)
+        return request
+
+    # ------------------------------------------------------------------
+    # jit memos
+
+    def _prefill_fn(self, width: int):
+        fn = self._prefills.get(width)
+        if fn is None:
+            cache_len_dim = -(-width // self.kv.block_size) * self.kv.block_size
+            fn = jax.jit(lambda p, b: T.prefill(p, b, self.cfg,
+                                                max_len=cache_len_dim))
+            self._prefills[width] = fn
+        return fn
+
+    def _decode_fn(self, nb: int):
+        fn = self._decodes.get(nb)
+        if fn is None:
+            fn = jax.jit(lambda p, c, b: T.decode_step(p, c, b, self.cfg),
+                         donate_argnums=(1,))
+            self._decodes[nb] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    # admission + prefill (slots join)
+
+    def _admissions(self) -> None:
+        while self.queue and None in self.slots:
+            req = self.queue[0]
+            if self.scheduler is not None:
+                decision, info = self.scheduler.admit(
+                    req, n_running=self.n_running)
+                if decision is Decision.REFUSE:
+                    self.queue.popleft()
+                    req.state = RequestState.REFUSED
+                    req.refusal = self.scheduler.refusal(req, info)
+                    self.refused.append(req)
+                    continue
+                if decision is Decision.DEFER:
+                    break
+            blocks = self.kv.alloc(self.kv.blocks_for(
+                min(req.prompt_len + req.max_new_tokens, self.scfg.max_len)))
+            if blocks is None:
+                break                      # pool full: retry next step
+            self.queue.popleft()
+            req.blocks = blocks
+            req.state = RequestState.ADMITTED
+            self._prefill_into(req, self.slots.index(None))
+
+    def _prefill_into(self, req: Request, slot: int) -> None:
+        S = req.prompt_len
+        width = min(_next_pow2(max(S, self.kv.block_size)),
+                    -(-self.scfg.max_len // self.kv.block_size)
+                    * self.kv.block_size)
+        pad = width - S
+        tokens = np.zeros((1, width), np.int32)
+        tokens[0, pad:] = req.prompt
+        out = self._prefill_fn(width)(self.params, {
+            "tokens": jnp.asarray(tokens),
+            "pos_offset": jnp.asarray([pad], jnp.int32),
+        })
+        self._key, sub = jax.random.split(self._key)
+        tok = int(np.asarray(self._sample(out["logits"], sub))[0])
+        req.state = RequestState.RUNNING
+        req.slot = slot
+        req.tokens.append(tok)
+        req.t_first_token = time.perf_counter()
+        self.kv.pack_prefill(out["cache"], req.blocks,
+                             prompt_len=S, pad=pad)
+        self.slots[slot] = req
+        self._cache_len[slot] = S
+        self._last_tok[slot] = tok
+        self._retire_if_done(req)   # max_new_tokens=1 / instant EOS
+
+    # ------------------------------------------------------------------
+    # decode (all occupied slots advance one token)
+
+    def _decode_once(self) -> None:
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return
+        nb_need = max(int(self._cache_len[i]) // self.kv.block_size + 1
+                      for i in active)
+        nb = min(_next_pow2(nb_need), self.kv.blocks_per_seq)
+        table = self.kv.table_array(
+            [r.blocks[:nb] if r is not None else [] for r in self.slots], nb)
+        batch = {
+            "tokens": jnp.asarray(self._last_tok[:, None]),
+            "cache_len": jnp.asarray(
+                np.where([r is not None for r in self.slots],
+                         self._cache_len, 0).astype(np.int32)),
+            "block_table": table,
+        }
+        logits, self.kv.pool = self._decode_fn(nb)(
+            self.params, self.kv.pool, batch)
+        self._key, sub = jax.random.split(self._key)
+        toks = np.asarray(self._sample(logits, sub))
+        self.decode_steps += 1
+        now = time.perf_counter()
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.tokens.append(tok)
+            self._cache_len[i] += 1
+            self._last_tok[i] = tok
+            self._retire_if_done(req, now)
+
+    def _retire_if_done(self, req: Request, now: float | None = None) -> None:
+        done = (req.tokens[-1] == self.scfg.eos_id
+                or req.n_generated >= req.max_new_tokens
+                or req.prompt_len + req.n_generated >= self.scfg.max_len)
+        if not done:
+            return
+        req.state = RequestState.FINISHED
+        req.t_finished = now if now is not None else time.perf_counter()
+        self.kv.free(req.blocks)
+        req.blocks = []
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            self._cache_len[req.slot] = 0
+            self._last_tok[req.slot] = 0
+        self.finished.append(req)
+
+    # ------------------------------------------------------------------
+
+    def step(self) -> None:
+        """One engine iteration: admit+prefill into free slots, then one
+        ragged decode step for every occupied slot."""
+        self._step += 1
+        self._admissions()
+        self._decode_once()
+
+    def run(self, requests: list[Request] | None = None, *,
+            max_steps: int = 100_000) -> list[Request]:
+        """Drain: submit ``requests`` (if given) and step until idle."""
+        for r in requests or ():
+            self.submit(r)
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            self.step()
+        return self.finished
+
+    # ------------------------------------------------------------------
+
+    def metrics(self) -> dict:
+        ttfts = [r.ttft_s for r in self.finished if r.ttft_s is not None]
+        tpots = [r.tpot_s for r in self.finished if r.tpot_s is not None]
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else float("nan")
+
+        return {
+            "finished": len(self.finished),
+            "refused": len(self.refused),
+            "decode_steps": self.decode_steps,
+            "tokens_out": sum(r.n_generated for r in self.finished),
+            "ttft_p50_ms": pct(ttfts, 50) * 1e3,
+            "ttft_p99_ms": pct(ttfts, 99) * 1e3,
+            "tpot_p50_ms": pct(tpots, 50) * 1e3,
+            "tpot_p99_ms": pct(tpots, 99) * 1e3,
+            "kv_bytes": self.kv.bytes,
+            "kv_dense_bytes": self.kv.dense_bytes,
+            "block_size": self.kv.block_size,
+        }

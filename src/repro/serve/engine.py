@@ -1,21 +1,23 @@
 """Batched serving engine: prefill + KV-cache decode with slot management.
 
-Continuous-batching-lite: a fixed pool of ``n_slots`` sequences; finished
-sequences (EOS or max length) free their slot for the next queued request.
-Sampling is greedy or temperature-based.  The decode step is a single jitted
-function reused across the whole serving lifetime (shape-stable: the cache
-is allocated once at ``max_len``).
+The *lockstep* engine: one fixed batch prefills together and decodes
+until every member finishes (it is the baseline the continuous-batching
+engine in ``continuous.py`` is gated against).  Sampling runs on device
+— a jitted greedy/``jax.random.categorical`` sampler — so only sampled
+token ids cross the device boundary each step.  Ragged (mixed-length)
+prompts are supported via left-padding with a per-row length vector.
 
-Placement runs through the same cost-engine admission gate as the training
-launcher (paper §6.4 safety property): configure ``ServeConfig.device`` (a
-device-registry name or a calibrated spec) and the engine predicts the
-serving footprint before allocating slots, refusing placements that exceed
-the device's memory — instead of OOM-killing a co-located process.
+Placement runs through the same cost-engine admission gate as the
+training launcher (paper §6.4 safety property): configure
+``ServeConfig.device`` (a device-registry name or a calibrated spec) and
+the engine predicts the serving footprint before allocating slots,
+refusing placements that exceed the device's memory — instead of
+OOM-killing a co-located process.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -23,12 +25,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.serve.scheduler import PlacementRefused
 
 __all__ = ["ServeConfig", "ServeEngine", "PlacementRefused"]
-
-
-class PlacementRefused(RuntimeError):
-    """The admission gate predicted this serving cell exceeds the device."""
 
 
 @dataclass
@@ -42,6 +41,24 @@ class ServeConfig:
     device: "str | object | None" = None   # registry name / DeviceSpec / path
     gamma_budget_mb: float | None = None   # None + device → device capacity
     admission_margin: float = 0.1
+
+
+def pad_ragged(prompts) -> tuple[np.ndarray, np.ndarray]:
+    """Left-pad a list of 1-D prompts (or a (B, S) array) to a common
+    width.  Returns (tokens (B, S0), lens (B,)).  Left padding keeps the
+    prefill's last column = every row's final prompt token, so one
+    logits slice serves the whole ragged batch."""
+    if isinstance(prompts, np.ndarray) and prompts.ndim == 2:
+        B, S0 = prompts.shape
+        return prompts.astype(np.int32), np.full(B, S0, np.int64)
+    rows = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+    lens = np.array([len(r) for r in rows], np.int64)
+    assert lens.min() > 0, "empty prompt"
+    S0 = int(lens.max())
+    tokens = np.zeros((len(rows), S0), np.int32)
+    for i, r in enumerate(rows):
+        tokens[i, S0 - len(r):] = r
+    return tokens, lens
 
 
 class ServeEngine:
@@ -62,7 +79,17 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, b: T.decode_step(p, c, b, cfg), donate_argnums=(1,)
         )
-        self._rng = np.random.default_rng(self.scfg.seed)
+        temp = float(self.scfg.temperature)
+
+        def sample(logits, key):
+            z = logits[:, -1].astype(jnp.float32)
+            if temp <= 0:
+                return jnp.argmax(z, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(key, z / temp, axis=-1).astype(
+                jnp.int32)
+
+        self._sampler = jax.jit(sample)
+        self._key = jax.random.PRNGKey(self.scfg.seed)
 
     # ------------------------------------------------------------------
 
@@ -118,45 +145,48 @@ class ServeEngine:
                 f"serving cell {self.cfg.name} n_slots={self.scfg.n_slots} "
                 f"max_len={self.scfg.max_len} predicted "
                 f"{info['gamma_eff']:.0f}MB effective > budget "
-                f"({info})")
+                f"({info})", info)
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
-        logits = np.asarray(logits[:, -1].astype(jnp.float32))
-        if self.scfg.temperature <= 0:
-            return logits.argmax(-1).astype(np.int32)
-        z = logits / self.scfg.temperature
-        z -= z.max(-1, keepdims=True)
-        p = np.exp(z)
-        p /= p.sum(-1, keepdims=True)
-        # vectorized inverse-CDF over the whole batch: one uniform per row,
-        # first index whose running mass exceeds it (no per-row rng.choice).
-        # Force the last cumsum entry to 1: f32 accumulation can leave it
-        # fractionally below a u drawn near 1, and an all-False mask would
-        # silently argmax to token 0.
-        cdf = p.cumsum(-1)
-        cdf[:, -1] = 1.0
-        u = self._rng.random((p.shape[0], 1))
-        return (cdf > u).argmax(-1).astype(np.int32)
+        """On-device sampling: the full-vocab logits never leave the
+        device — only the (B,) sampled ids do.  Seeded: the engine's key
+        chain is split once per sampling step, so a fixed ``ServeConfig.seed``
+        reproduces the same stream across runs."""
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(self._sampler(logits, sub))
 
-    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32) -> dict:
-        """prompts: (B, S0) int32 (B ≤ n_slots; right-aligned, no padding).
+    def generate(self, prompts, max_new_tokens: int = 32) -> dict:
+        """prompts: (B, S0) int32 array, or a list of 1-D ragged prompts
+        (left-padded internally; B ≤ n_slots).
 
-        Returns dict with generated tokens (B, ≤max_new) and stats.
+        Returns dict with ``tokens`` (B, T) raw samples, EOS-trimmed
+        per-request ``outputs`` / ``token_counts``, and stats.
         """
-        B, S0 = prompts.shape
+        tokens, lens = pad_ragged(prompts)
+        B, S0 = tokens.shape
         assert B <= self.scfg.n_slots
-        out = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        batch = {"tokens": jnp.asarray(tokens)}
+        pad = S0 - lens
+        ragged = bool(pad.any())
+        if ragged:
+            assert not getattr(self.cfg, "n_prefix", 0), \
+                "ragged prompts need a plain decoder stack"
+            batch["pos_offset"] = jnp.asarray(pad, jnp.int32)
+        out = self._prefill(self.params, batch)
         cache, cache_len = out["cache"], out["cache_len"]
         tok = self._sample(out["logits"])
         generated = [tok]
-        finished = np.zeros(B, bool)
+        finished = tok == self.scfg.eos_id
         steps = 0
         # host-side mirror of cache_len: the loop bound must not force a
         # device→host sync (int(cache_len)) on every decode step
         host_len = S0 + getattr(self.cfg, "n_prefix", 0)
+        pos_offset = batch.get("pos_offset")
         for _ in range(max_new_tokens - 1):
             batch = {"tokens": jnp.asarray(tok[:, None]),
                      "cache_len": cache_len}
+            if pos_offset is not None:
+                batch["pos_offset"] = pos_offset
             logits, cache = self._decode(self.params, cache, batch)
             cache_len = cache_len + 1
             host_len += 1
@@ -167,8 +197,19 @@ class ServeEngine:
             generated.append(tok)
             if finished.all() or host_len >= self.scfg.max_len - 1:
                 break
+        stacked = np.stack(generated, axis=1)
+        outputs, counts = [], np.zeros(B, np.int64)
+        for i in range(B):
+            row = stacked[i]
+            hits = np.flatnonzero(row == self.scfg.eos_id)
+            trimmed = row[: hits[0]] if len(hits) else row
+            outputs.append(trimmed)
+            counts[i] = len(trimmed)
         return {
-            "tokens": np.stack(generated, axis=1),
+            "tokens": stacked,
+            "outputs": outputs,
+            "token_counts": counts,
+            "prompt_lens": lens,
             "decode_steps": steps + 1,
             "finished": finished,
         }

@@ -1,0 +1,87 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A :class:`Request` is the unit the scheduler prices and the batcher
+places: it arrives (``QUEUED``), is admitted against the cost model
+(``ADMITTED``), prefills into a free decode slot (``RUNNING``), and
+leaves the batch on EOS / token budget (``FINISHED``) or is bounced by
+the scheduler (``REFUSED``).  Timing fields are wall-clock marks the
+bench turns into TTFT / per-token latency percentiles.
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["Request", "RequestState"]
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    ADMITTED = "admitted"
+    RUNNING = "running"
+    FINISHED = "finished"
+    REFUSED = "refused"
+
+
+_ids = itertools.count()
+
+
+@dataclass(eq=False)      # identity equality: prompt arrays don't compare
+class Request:
+    prompt: np.ndarray                  # (S,) int32 token ids
+    max_new_tokens: int = 32
+    slo_ms: float | None = None         # per-token latency SLO (None = none)
+    rid: int = field(default_factory=lambda: next(_ids))
+    state: RequestState = RequestState.QUEUED
+
+    # filled in by the engine
+    slot: int | None = None
+    blocks: list[int] = field(default_factory=list)   # physical KV blocks
+    tokens: list[int] = field(default_factory=list)   # generated ids
+    estimate: "object | None" = None                  # CostEstimate at admit
+    refusal: "object | None" = None                   # PlacementRefused
+
+    # wall-clock marks (seconds, time.perf_counter domain)
+    t_arrival: float = field(default_factory=time.perf_counter)
+    t_first_token: float | None = None
+    t_finished: float | None = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if not len(self.prompt):
+            raise ValueError("empty prompt")
+
+    # ------------------------------------------------------------------
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def ttft_s(self) -> float | None:
+        """Time to first token (prefill wait + queueing)."""
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_arrival
+
+    @property
+    def tpot_s(self) -> float | None:
+        """Mean per-output-token latency after the first token."""
+        if self.t_finished is None or self.n_generated < 2:
+            return None
+        return (self.t_finished - self.t_first_token) / (self.n_generated - 1)
+
+    def output(self, eos_id: int) -> np.ndarray:
+        """Generated ids trimmed at (and excluding) the first EOS."""
+        out = np.asarray(self.tokens, np.int32)
+        hits = np.flatnonzero(out == eos_id)
+        return out[: hits[0]] if len(hits) else out

@@ -1,0 +1,175 @@
+"""SLO-aware admission scheduler: price the batch before joining it.
+
+perf4sight's predict-then-place property, applied per request: before a
+prompt may occupy a decode slot, the scheduler prices the batch as it
+would look *after* admission (one ``CostQuery`` at ``bs = running + 1``
+over the full context window) through the same forest→analytical
+``CostEngine`` chain as the training launcher, and compares:
+
+* predicted memory footprint (× safety margin) against the
+  ``DeviceSpec`` HBM envelope / explicit ``gamma_budget_mb``;
+* a per-token latency proxy (``phi_ms / max_len`` of the composed
+  batch) against the request's latency SLO;
+* the request's own token need against the context window.
+
+Decisions are ``ADMIT`` (join now), ``DEFER`` (temporarily out of
+slots/KV blocks — the engine retries next step), or ``REFUSE`` — a
+:class:`PlacementRefused` carrying the estimate's ledger-class
+breakdown (``detail["cost_classes"]``) so operators see *which* cost
+class blew the budget, not just that one did.
+
+The decision path is pure prediction: with a fitted ``LMForest`` behind
+the engine it triggers zero JAX compilations (asserted by
+``tests/test_serve.py`` with a booby-trapped ``jax.jit``).
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["Decision", "PlacementRefused", "SLOScheduler", "ServeSLO"]
+
+
+class PlacementRefused(RuntimeError):
+    """The admission gate predicted this placement exceeds the device.
+
+    ``info`` carries the gate's evidence: predicted vs effective footprint,
+    budget, backend source, and (when the analytical backend answered) the
+    per-ledger-class cost breakdown.
+    """
+
+    def __init__(self, message: str, info: dict | None = None):
+        super().__init__(message)
+        self.info = info or {}
+
+
+class Decision(enum.Enum):
+    ADMIT = "admit"
+    DEFER = "defer"
+    REFUSE = "refuse"
+
+
+@dataclass
+class ServeSLO:
+    """Serving-cell service-level objectives (engine-wide defaults;
+    ``Request.slo_ms`` overrides per request)."""
+    ttft_ms: float | None = None   # first-token target, prefill proxy
+    tpot_ms: float | None = None   # per-output-token target, decode proxy
+
+
+class SLOScheduler:
+    def __init__(self, cfg: ArchConfig, cost_engine, *,
+                 max_len: int, n_slots: int,
+                 gamma_budget_mb: float | None = None,
+                 safety_margin: float = 0.1,
+                 slo: ServeSLO | None = None,
+                 seq_bucket: int = 64):
+        self.cfg = cfg
+        self.engine = cost_engine
+        self.max_len = int(max_len)
+        self.n_slots = int(n_slots)
+        self.safety_margin = float(safety_margin)
+        self.slo = slo or ServeSLO()
+        self.seq_bucket = max(1, int(seq_bucket))
+        # Registry convention: ArchConfig.reduced() appends "-smoke"; the
+        # gate must predict the config actually being served.
+        arch, reduced = cfg.name, False
+        if arch.endswith("-smoke"):
+            arch, reduced = arch[: -len("-smoke")], True
+        self.arch, self.reduced = arch, reduced
+        budget = gamma_budget_mb
+        device = getattr(cost_engine, "device", None)
+        if budget is None and device is not None:
+            budget = device.hbm_bytes / 1e6
+        self.gamma_budget_mb = budget
+        self.device = device
+        self.unavailable: str | None = None   # backend couldn't score us
+
+    # ------------------------------------------------------------------
+
+    def _estimate(self, bs: int, seq: int):
+        from repro.engine import BackendUnavailable, CostQuery
+
+        seq = min(self.max_len,
+                  max(self.seq_bucket,
+                      -(-seq // self.seq_bucket) * self.seq_bucket))
+        query = CostQuery(arch=self.arch, bs=max(1, bs), seq=seq,
+                          stage="infer", reduced=self.reduced)
+        try:
+            return self.engine.estimate_one(query)
+        except BackendUnavailable as e:
+            self.unavailable = str(e)
+            return None
+
+    def price(self, request) -> "object | None":
+        """Per-request cost (bs=1 over its own token need) — attached to
+        the request for the bench's goodput accounting."""
+        est = self._estimate(1, request.prompt_len + request.max_new_tokens)
+        request.estimate = est
+        return est
+
+    # ------------------------------------------------------------------
+
+    def admit(self, request, *, n_running: int) -> tuple[Decision, dict]:
+        """Price the composed batch and decide.  Never raises: a REFUSE
+        returns the decision with the refusal info; the engine turns it
+        into a ``PlacementRefused`` on the request."""
+        need = request.prompt_len + request.max_new_tokens
+        if need > self.max_len:
+            return Decision.REFUSE, {
+                "reason": f"needs {need} tokens > max_len={self.max_len}"}
+
+        est = self._estimate(n_running + 1, self.max_len)
+        if est is None:
+            # unknown arch / unscorable cell: serve ungated rather than
+            # refusing workloads the model can't price (legacy behaviour)
+            return Decision.ADMIT, {"skipped": self.unavailable}
+
+        margin = 1 + self.safety_margin
+        info = {
+            "bs": n_running + 1, "seq": self.max_len,
+            "gamma_mb": est.gamma_mb, "gamma_eff": est.gamma_mb * margin,
+            "phi_ms": est.phi_ms, "source": est.source,
+            "budget_mb": self.gamma_budget_mb,
+        }
+        if self.device is not None:
+            info["device"] = self.device.name
+        classes = (est.detail or {}).get("cost_classes")
+        if classes is not None:
+            info["cost_classes"] = classes
+
+        if (self.gamma_budget_mb is not None
+                and info["gamma_eff"] > self.gamma_budget_mb):
+            info["reason"] = (
+                f"predicted {info['gamma_eff']:.0f}MB effective footprint "
+                f"at bs={n_running + 1} > budget {self.gamma_budget_mb:.0f}MB")
+            return Decision.REFUSE, info
+
+        slo_ms = request.slo_ms
+        if slo_ms is None:
+            slo_ms = self.slo.tpot_ms
+        if slo_ms is not None:
+            tpot = est.phi_ms / self.max_len * margin
+            info["tpot_proxy_ms"] = tpot
+            if tpot > slo_ms:
+                info["reason"] = (
+                    f"per-token proxy {tpot:.3f}ms at bs={n_running + 1} "
+                    f"> SLO {slo_ms:.3f}ms")
+                return Decision.REFUSE, info
+
+        return Decision.ADMIT, info
+
+    def refusal(self, request, info: dict) -> PlacementRefused:
+        breakdown = ""
+        if "cost_classes" in info:
+            top = sorted(info["cost_classes"].items(),
+                         key=lambda kv: -float(kv[1]))[:3]
+            breakdown = " [" + ", ".join(
+                f"{k}={float(v):.3g}" for k, v in top) + "]"
+        return PlacementRefused(
+            f"request {request.rid} (prompt={request.prompt_len}, "
+            f"max_new={request.max_new_tokens}) refused: "
+            f"{info.get('reason', 'over budget')}{breakdown}", info)

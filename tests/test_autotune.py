@@ -76,7 +76,7 @@ def test_largest_dividing_block():
 
 def test_all_kernels_register_tilings():
     assert list_tilings() == ["conv_mm", "flash_attention", "moe_dispatch",
-                              "ssm_scan"]
+                              "serve_kv", "ssm_scan"]
 
 
 @pytest.mark.parametrize("kernel,shape", [
