@@ -15,6 +15,10 @@ Runs both benchmarks in-process and enforces:
   breakdowns, and the APPLIED class-wise
   calibration (CNN and campaign HLO fits both) is never worse than the
   aggregate 3-term fallback,
+* energy (docs/engine.md "Energy"): the priced ledger's per-class joule
+  sums reproduce its aggregate (same relative 1e-9), and the applied
+  energy fit (CNN calibration and campaign HLO both) is never worse than
+  the tied-aggregate fallback,
 * campaign LM-forest accuracy (docs/campaign.md): held-out-cell latency
   MAPE and combined latency+memory MAPE from the campaign-fitted forest
   beat the uncalibrated analytical path on the host-CPU smoke grid,
@@ -70,6 +74,11 @@ def main() -> int:
     check(eng["ledger_parity_dev"] <= LEDGER_PARITY_RTOL,
           f"cost-ledger breakdown parity rel dev "
           f"{eng['ledger_parity_dev']:.3g} <= {LEDGER_PARITY_RTOL}")
+    # Energy obeys the same contract: per-class joule sums reproduce the
+    # priced ledger's aggregate (docs/engine.md "Energy").
+    check(eng["ledger_energy_parity_dev"] <= LEDGER_PARITY_RTOL,
+          f"cost-ledger energy parity rel dev "
+          f"{eng['ledger_energy_parity_dev']:.3g} <= {LEDGER_PARITY_RTOL}")
     if "phi_mape_cal" in eng:  # golden fixture present
         check(eng["phi_mape_cal"] <= PHI_MAPE_MAX,
               f"calibrated phi MAPE {eng['phi_mape_cal']:.3f} <= {PHI_MAPE_MAX}")
@@ -81,6 +90,13 @@ def main() -> int:
         check(eng["phi_mape_cal"] <= eng["phi_mape_cal_aggregate"] * (1 + 1e-9),
               f"class-wise phi MAPE {eng['phi_mape_cal']:.3f} <= aggregate "
               f"{eng['phi_mape_cal_aggregate']:.3f}")
+        if "energy_mape_cal" in eng:
+            # Same never-worse contract for the energy fit: the applied
+            # (lower-MAPE) fit can never lose to the tied aggregate.
+            check(eng["energy_mape_cal"]
+                  <= eng["energy_mape_cal_aggregate"] * (1 + 1e-9),
+                  f"applied energy MAPE {eng['energy_mape_cal']:.3f} <= "
+                  f"aggregate {eng['energy_mape_cal_aggregate']:.3f}")
     else:
         print("SKIP calibration accuracy (golden fixture absent)")
 
@@ -113,6 +129,12 @@ def main() -> int:
                   f"campaign applied HLO phi MAPE "
                   f"{camp['hlo_phi_mape_applied']:.3f} <= aggregate "
                   f"{camp['hlo_phi_mape_aggregate']:.3f}")
+        if "hlo_energy_mape_applied" in camp:
+            check(camp["hlo_energy_mape_applied"]
+                  <= camp["hlo_energy_mape_aggregate"] * (1 + 1e-9),
+                  f"campaign applied HLO energy MAPE "
+                  f"{camp['hlo_energy_mape_applied']:.3f} <= aggregate "
+                  f"{camp['hlo_energy_mape_aggregate']:.3f}")
     else:
         print("SKIP campaign accuracy (smoke grid too sparse)")
 

@@ -114,14 +114,14 @@ def run(print_fn=print, population: int = POPULATION, repeats: int = 3) -> dict:
     print_fn(csv_line("engine/cached_ms_per_100", t_cached * 1e3,
                       f"hits={engine.hits}"))
     print_fn(csv_line("engine/parity_max_abs_dev", max_dev, "expect=0"))
-    ledger_dev = ledger_breakdown_parity(print_fn)
+    ledger = ledger_breakdown_parity(print_fn)
     accuracy = calibration_accuracy(print_fn)
     return {"speedup": speedup, "t_scalar_s": t_scalar, "t_batch_s": t_batch,
             "t_cached_s": t_cached, "max_dev": max_dev,
-            "ledger_parity_dev": ledger_dev, **accuracy}
+            **ledger, **accuracy}
 
 
-def ledger_breakdown_parity(print_fn=print) -> float:
+def ledger_breakdown_parity(print_fn=print) -> dict:
     """Cost-ledger parity on a compiled golden program: the per-op ledger's
     class sums must reproduce the legacy HloCost scalars (the costmodel
     contract every downstream breakdown relies on).  Reported as a
@@ -156,7 +156,20 @@ def ledger_breakdown_parity(print_fn=print) -> float:
     print_fn(csv_line("engine/ledger_breakdown_parity_dev", dev,
                       f"relative expect=0 records={len(cost.ledger)} "
                       f"matmul_flops_share={matmul_share:.2f}"))
-    return dev
+    # Energy parity (docs/engine.md "Energy"): price the same ledger under
+    # a power envelope and require the per-class joule sums to reproduce
+    # the ledger aggregate (same relative tolerance, same reordering
+    # caveat).
+    from repro.engine import get_device
+    from repro.engine.decompose import price_ledger_energy
+
+    eled = price_ledger_energy(cost.ledger, get_device("tx2_like"))
+    esums = eled.class_sums()
+    edev = (abs(sum(s["energy_j"] for s in esums.values()) - eled.energy_j)
+            / max(abs(eled.energy_j), 1e-30))
+    print_fn(csv_line("engine/ledger_energy_parity_dev", edev,
+                      f"relative expect=0 total={eled.energy_j:.3g}J"))
+    return {"ledger_parity_dev": dev, "ledger_energy_parity_dev": edev}
 
 
 def calibration_accuracy(print_fn=print) -> dict:
@@ -202,12 +215,26 @@ def calibration_accuracy(print_fn=print) -> dict:
                       f"n={before['n']}"))
     print_fn(csv_line("engine/gamma_mape_calibrated", after["gamma_mape"],
                       "target<=0.10"))
-    return {"phi_mape_uncal": before["phi_mape"],
-            "phi_mape_cal": after["phi_mape"],
-            "phi_mape_cal_aggregate": spec.meta["phi_mape_aggregate"],
-            "phi_mape_cal_classwise": spec.meta["phi_mape_classwise"],
-            "gamma_mape_uncal": before["gamma_mape"],
-            "gamma_mape_cal": after["gamma_mape"]}
+    out = {"phi_mape_uncal": before["phi_mape"],
+           "phi_mape_cal": after["phi_mape"],
+           "phi_mape_cal_aggregate": spec.meta["phi_mape_aggregate"],
+           "phi_mape_cal_classwise": spec.meta["phi_mape_classwise"],
+           "gamma_mape_uncal": before["gamma_mape"],
+           "gamma_mape_cal": after["gamma_mape"]}
+    # Energy fit accuracy (docs/engine.md "Energy"): same aggregate vs
+    # class-wise pair as latency.  The golden fixture predates energy
+    # measurement, so these targets are the watts-proxy integral —
+    # energy_proxied says how many; the never-worse gate still binds.
+    if spec.meta.get("energy_fit", "none") != "none":
+        print_fn(csv_line("engine/energy_mape_cal_aggregate",
+                          spec.meta["energy_mape_aggregate"],
+                          f"proxied={spec.meta['energy_proxied']}"))
+        print_fn(csv_line("engine/energy_mape_cal_classwise",
+                          spec.meta["energy_mape_classwise"],
+                          f"fit={spec.meta['energy_fit']}"))
+        out["energy_mape_cal"] = spec.meta["energy_mape"]
+        out["energy_mape_cal_aggregate"] = spec.meta["energy_mape_aggregate"]
+    return out
 
 
 def campaign_accuracy(print_fn=print, *, ledger_path: str | None = None,
@@ -325,6 +352,18 @@ def campaign_accuracy(print_fn=print, *, ledger_path: str | None = None,
                               f"fit={spec.meta['latency_fit']} re-priced"))
             extra["hlo_phi_mape_applied"] = applied
             extra["hlo_phi_mape_aggregate"] = spec.meta["phi_mape_aggregate"]
+            # Energy fit rows (v3 ledgers; v2 records carry no energy and
+            # gate the fit off — skip, never fail, on a stale /tmp ledger).
+            if spec.meta.get("energy_fit", "none") != "none":
+                print_fn(csv_line("campaign/hlo_energy_mape_aggregate",
+                                  spec.meta["energy_mape_aggregate"],
+                                  "tied fallback"))
+                print_fn(csv_line("campaign/hlo_energy_mape_applied",
+                                  spec.meta["energy_mape"],
+                                  f"fit={spec.meta['energy_fit']}"))
+                extra["hlo_energy_mape_applied"] = spec.meta["energy_mape"]
+                extra["hlo_energy_mape_aggregate"] = \
+                    spec.meta["energy_mape_aggregate"]
 
     # Held-out cells through BOTH paths.  Same split seed as the fit, so
     # the forest has never seen these cells.
@@ -362,6 +401,10 @@ def campaign_accuracy(print_fn=print, *, ledger_path: str | None = None,
     print_fn(csv_line("campaign/gamma_mape_forest", out["forest_gamma_mape"],
                       ""))
     print_fn(csv_line("campaign/gamma_mape_analytical", anal_gamma, ""))
+    if meta.get("holdout_energy_mape") is not None:
+        print_fn(csv_line("campaign/energy_mape_forest",
+                          meta["holdout_energy_mape"], "zero-compile"))
+        out["forest_energy_mape"] = meta["holdout_energy_mape"]
     return out
 
 

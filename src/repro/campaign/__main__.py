@@ -81,7 +81,9 @@ def _cmd_fit(args) -> int:
         save_device_spec(args.hlo_device_out, spec)
         print(f"calibrated LM DeviceSpec ({spec.name}, "
               f"{spec.meta['latency_fit']} fit, "
-              f"phi MAPE {spec.meta['phi_mape']:.3f}) -> {args.hlo_device_out}")
+              f"phi MAPE {spec.meta['phi_mape']:.3f}, "
+              f"energy {spec.meta.get('energy_fit', 'none')} fit)"
+              f" -> {args.hlo_device_out}")
     return 0
 
 
@@ -97,6 +99,9 @@ def _breakdown(records: list[dict]) -> dict:
     totals = CostLedger.merge_class_sums(with_classes)
     flops_tot = sum(t["flops"] for t in totals.values()) or 1.0
     hbm_tot = sum(t["hbm_bytes"] for t in totals.values()) or 1.0
+    # Schema-v3 records bucket per-class dynamic joules too; v2 buckets
+    # merge as zero energy and the share column just stays 0.
+    energy_tot = sum(t.get("energy_j", 0.0) for t in totals.values()) or 1.0
     return {
         "records_with_breakdown": len(with_classes),
         "classes": {
@@ -104,6 +109,7 @@ def _breakdown(records: list[dict]) -> dict:
                 **t,
                 "flops_share": round(t["flops"] / flops_tot, 4),
                 "hbm_share": round(t["hbm_bytes"] / hbm_tot, 4),
+                "energy_share": round(t.get("energy_j", 0.0) / energy_tot, 4),
             }
             for cls, t in totals.items()
         },
@@ -112,8 +118,11 @@ def _breakdown(records: list[dict]) -> dict:
 
 def _cmd_status(args) -> int:
     ledger = CampaignLedger(args.ledger)
+    ok_recs = ledger.records("ok")
     out = {"ledger_records": len(ledger),
            "ok": len(ledger.ok_keys),
+           "energy_j_total": round(sum(
+               r.get("energy_j", 0.0) or 0.0 for r in ok_recs), 6),
            "quarantined": sorted(
                f"{r['arch']}×{r['shape']['name']}[{r['mesh']}]"
                for r in ledger.records("failed"))}
@@ -126,7 +135,7 @@ def _cmd_status(args) -> int:
             foreign_records=len(set(ledger._by_key) - keys),
         )
     if args.breakdown:
-        out["breakdown"] = _breakdown(ledger.records("ok"))
+        out["breakdown"] = _breakdown(ok_recs)
     print(json.dumps(out, indent=2))
     return 0
 

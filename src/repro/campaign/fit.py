@@ -69,6 +69,11 @@ class LMForest:
                   min_samples_leaf=min_samples_leaf, max_features="third")
         self.gamma_model = HybridRegressor(seed=seed, **kw)
         self.phi_model = HybridRegressor(seed=seed + 1, **kw)
+        # Energy is optional: only campaigns whose ledgers carry the v3
+        # watts-proxy column grow it; ``energy_fitted`` gates prediction
+        # (and persistence) so pre-energy artifacts stay loadable.
+        self.energy_model = HybridRegressor(seed=seed + 2, **kw)
+        self.energy_fitted = False
         self.meta: dict = {}
         self.fitted = False
 
@@ -104,12 +109,30 @@ class LMForest:
         ])
         return self.predict_features(X)
 
+    def predict_energy(self, queries, *, device: DeviceSpec | None = None
+                       ) -> np.ndarray:
+        """Batched per-step energy (J) for engine ``CostQuery``s — zeros
+        when the fitting campaign carried no energy column."""
+        dev = device or self.default_device
+        mesh = self.default_mesh
+        reduced_default = bool(self.meta.get("reduced", True))
+        if not self.energy_fitted:
+            return np.zeros(len(list(queries)), dtype=np.float64)
+        X = np.stack([
+            cell_features(*query_cell(q, reduced_default=reduced_default),
+                          mesh, dev)
+            for q in queries
+        ])
+        return self.energy_model.predict(np.atleast_2d(X))
+
     # -- identity / persistence -------------------------------------------
 
     def content_hash(self) -> str:
         h = hashlib.sha1()
         h.update(self.gamma_model.content_hash().encode())
         h.update(self.phi_model.content_hash().encode())
+        if self.energy_fitted:  # pre-energy forests keep their old hash
+            h.update(self.energy_model.content_hash().encode())
         h.update(json.dumps(self.meta.get("device_spec", {}),
                             sort_keys=True, default=str).encode())
         return h.hexdigest()
@@ -120,20 +143,27 @@ class LMForest:
         both."""
         if path.endswith(".npz"):
             arrays: dict[str, np.ndarray] = {}
-            for prefix, model in (("gamma_", self.gamma_model),
-                                  ("phi_", self.phi_model)):
+            models = [("gamma_", self.gamma_model), ("phi_", self.phi_model)]
+            if self.energy_fitted:
+                models.append(("energy_", self.energy_model))
+            for prefix, model in models:
                 arrays.update(model.to_arrays(prefix))
             meta = json.dumps({"meta": self.meta,
+                               "energy_fitted": self.energy_fitted,
                                "feature_names": list(LM_FEATURE_NAMES)})
             arrays["campaign_meta"] = np.frombuffer(meta.encode(), dtype=np.uint8)
             atomic_write_bytes(path, lambda f: np.savez_compressed(f, **arrays),
                                suffix=".npz")
             return
-        atomic_write_json(path, {
+        blob = {
             "meta": self.meta, "feature_names": list(LM_FEATURE_NAMES),
+            "energy_fitted": self.energy_fitted,
             "gamma": self.gamma_model.to_dict(),
             "phi": self.phi_model.to_dict(),
-        })
+        }
+        if self.energy_fitted:
+            blob["energy"] = self.energy_model.to_dict()
+        atomic_write_json(path, blob)
 
     @classmethod
     def load(cls, path: str) -> "LMForest":
@@ -144,12 +174,21 @@ class LMForest:
                     bytes(arrays["campaign_meta"].tobytes()).decode())
                 self.gamma_model = HybridRegressor.from_arrays(arrays, "gamma_")
                 self.phi_model = HybridRegressor.from_arrays(arrays, "phi_")
+                # Tolerant of pre-energy artifacts: the flag (and arrays)
+                # only exist when the fitting ledger carried energy.
+                if header.get("energy_fitted"):
+                    self.energy_model = HybridRegressor.from_arrays(
+                        arrays, "energy_")
+                    self.energy_fitted = True
         else:
             with open(path) as f:
                 blob = json.load(f)
             header = blob
             self.gamma_model = HybridRegressor.from_dict(blob["gamma"])
             self.phi_model = HybridRegressor.from_dict(blob["phi"])
+            if blob.get("energy_fitted") and "energy" in blob:
+                self.energy_model = HybridRegressor.from_dict(blob["energy"])
+                self.energy_fitted = True
         names = header.get("feature_names", [])
         if names and list(names) != list(LM_FEATURE_NAMES):
             raise ValueError(
@@ -275,7 +314,17 @@ def fit_lm_forest(
     forest.phi_model.fit(X, p)
     forest.fitted = True
 
+    # Energy forest — only when every train row carries the v3 watts-proxy
+    # column (a mixed v2/v3 ledger would teach the model that re-measured
+    # cells cost 0 J).
+    e = np.array([r.get("energy_j", 0.0) or 0.0 for r in train],
+                 dtype=np.float64)
+    if np.all(e > 0):
+        forest.energy_model.fit(X, e)
+        forest.energy_fitted = True
+
     meta = {
+        "energy_fitted": forest.energy_fitted,
         "n_train": len(train), "n_heldout": len(heldout),
         "plan_hash": train[0].get("plan_hash"),
         "devices": sorted({r.get("device", "host_cpu") for r in train}),
@@ -293,6 +342,12 @@ def fit_lm_forest(
         pg, pp = forest.predict_features(Xh)
         meta["holdout_gamma_mape"] = mape(pg, gh)
         meta["holdout_phi_mape"] = mape(pp, ph)
+        if forest.energy_fitted:
+            eh = np.array([r.get("energy_j", 0.0) or 0.0 for r in heldout],
+                          dtype=np.float64)
+            if np.all(eh > 0):
+                meta["holdout_energy_mape"] = mape(
+                    forest.energy_model.predict(Xh), eh)
     forest.meta = meta
     return forest
 
@@ -369,6 +424,53 @@ def fit_hlo_constants(
                     **{n: float(v) for n, v in zip(names, c_cls[1:])},
                 }
 
+    # Energy — fitted exactly like latency (aggregate AND class-wise NNLS
+    # over the same columns, lower MAPE applied) from the schema-v3
+    # watts-proxy column.  Skipped when any executed cell lacks it (a v2
+    # ledger, or a zero-watt device envelope).  Whichever fit wins is
+    # stored over the ledger column names ("lm_energy"): the aggregate's
+    # tied coefficients map flops_*→c1, hbm_*→c2, collective→c3, so the
+    # backend prices energy through one path (classwise_seconds).
+    energy = np.array([r.get("energy_j", 0.0) or 0.0 for r in recs],
+                      dtype=np.float64)
+    energy_meta: dict = {"energy_fit": "none"}
+    e_cols = e_names = A_e = ce = None
+    if np.all(energy > 0):
+        e_agg = nnls(A, energy)
+        e_mape_agg = float(mape(A @ e_agg, energy))
+        e_mape_cls = None
+        use_classwise_e = False
+        if per_class and all(r.get("cost_classes") for r in recs):
+            e_cols = ledger_latency_columns([r["cost_classes"] for r in recs])
+            e_names = [n for n, v in e_cols.items() if np.any(v)]
+            if e_names:
+                A_e = np.stack(
+                    [np.ones_like(energy)] + [e_cols[n] for n in e_names],
+                    axis=1)
+                ce = nnls(A_e, energy)
+                e_mape_cls = float(mape(A_e @ ce, energy))
+                use_classwise_e = e_mape_cls <= e_mape_agg
+        if use_classwise_e:
+            class_coeffs["lm_energy"] = {
+                "_intercept": float(ce[0]),
+                **{n: float(v) for n, v in zip(e_names, ce[1:])},
+            }
+        else:
+            from repro.engine.decompose import LM_LATENCY_COLUMNS
+
+            tied = {"_intercept": float(e_agg[0])}
+            for n in LM_LATENCY_COLUMNS:
+                tied[n] = float(e_agg[1] if n.startswith("flops_")
+                                else e_agg[3] if n == "collective"
+                                else e_agg[2])
+            class_coeffs["lm_energy"] = tied
+        energy_meta = {
+            "energy_fit": "classwise" if use_classwise_e else "aggregate",
+            "energy_mape": (e_mape_cls if use_classwise_e else e_mape_agg),
+            "energy_mape_aggregate": e_mape_agg,
+            "energy_mape_classwise": e_mape_cls,
+        }
+
     # Inert (never-binding) terms keep a finite, serializable denominator.
     spec = replace(
         base,
@@ -380,16 +482,20 @@ def fit_hlo_constants(
         combine="sum",
         calibrated=True,
         class_coeffs={**{k: v for k, v in base.class_coeffs.items()
-                         if k != "lm_latency"}, **class_coeffs},
+                         if k not in ("lm_latency", "lm_energy")},
+                      **class_coeffs},
         meta={
             "base_device": base.name,
             "n_cells": len(recs),
             "plan_hash": recs[0].get("plan_hash"),
-            "phi_mape": (phi_mape_cls if class_coeffs else phi_mape_agg),
+            "phi_mape": (phi_mape_cls if "lm_latency" in class_coeffs
+                         else phi_mape_agg),
             "phi_mape_aggregate": phi_mape_agg,
             "phi_mape_classwise": phi_mape_cls,
-            "latency_fit": "classwise" if class_coeffs else "aggregate",
+            "latency_fit": ("classwise" if "lm_latency" in class_coeffs
+                            else "aggregate"),
             "fit": "campaign_hlo_nnls",
+            **energy_meta,
         },
     )
     # Self-check through the shared terms: predictions must reproduce the
@@ -397,9 +503,13 @@ def fit_hlo_constants(
     # via the shared classwise_seconds pricing).
     t = lm_roofline_terms(flops, hbm, coll, spec)
     assert np.allclose(spec.launch_overhead_s + sum(t), A @ c, rtol=1e-6)
-    if class_coeffs:
+    if "lm_latency" in class_coeffs:
         pred = classwise_seconds(cols, spec.class_coeffs["lm_latency"])
         assert np.allclose(pred, A_cls @ c_cls, rtol=1e-6)
+    if e_cols is not None and A_e is not None \
+            and spec.meta["energy_fit"] == "classwise":
+        pred_e = classwise_seconds(e_cols, spec.class_coeffs["lm_energy"])
+        assert np.allclose(pred_e, A_e @ ce, rtol=1e-6)
     return spec
 
 

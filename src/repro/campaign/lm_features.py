@@ -99,7 +99,7 @@ LM_FEATURE_NAMES: tuple[str, ...] = (
     "compute_s", "memory_s", "collective_s", "roofline_ms",
     # --- raw device constants (fleet transfer) ---
     "log_peak_flops", "log_hbm_bw", "log_ici_bw", "launch_overhead_ms",
-    "device_calibrated",
+    "device_calibrated", "idle_w", "peak_w",
     # --- per-op-class histogram (cost-ledger taxonomy, analytic provider) ---
 ) + CLASS_FEATURE_NAMES
 
@@ -190,7 +190,7 @@ def cell_features(
         compute_s, memory_s, coll_s, roofline_ms,
         math.log10(device.peak_flops), math.log10(device.hbm_bw),
         math.log10(device.ici_bw), device.launch_overhead_s * 1e3,
-        float(device.calibrated),
+        float(device.calibrated), device.idle_w, device.peak_w,
     )
     hist = class_histogram(analytic_class_sums(
         model_flops_dev, param_bytes_dev, act_bytes_dev, kv_bytes_dev,

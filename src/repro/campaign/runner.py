@@ -42,7 +42,11 @@ __all__ = ["CampaignLedger", "CampaignRunner", "measure_cell"]
 
 # v2: records carry ``cost_classes`` (the per-op-class ledger breakdown)
 # and ``device_fingerprint`` (checked at fit time — campaign/fit.py).
-LEDGER_SCHEMA_VERSION = 2
+# v3: executed records add ``watts_proxy`` / ``energy_j`` (the device
+# envelope's modelled draw at the measured phi) and the ``cost_classes``
+# buckets gain a per-class dynamic ``energy_j``.  Loads are tolerant:
+# v2 records simply lack the columns and the energy fits skip them.
+LEDGER_SCHEMA_VERSION = 3
 
 
 class CampaignLedger:
@@ -148,6 +152,14 @@ def measure_cell(
                 times.append(time.perf_counter() - t0)
         phi_ms = float(np.median(times)) * 1e3
 
+    # Watts proxy (schema v3): the device envelope's modelled average draw
+    # at the measured wall time, and the step energy it implies.  Zero
+    # when the cell didn't execute (no wall time to integrate over) or
+    # the spec declares no envelope — fits skip zero energy columns.
+    from repro.engine.decompose import price_ledger_energy, watts_proxy
+
+    dev = resolve_device(cell.device)
+    watts = float(watts_proxy(cost.flops, phi_ms / 1e3, dev)) if run else 0.0
     return {
         "gamma_mb": (mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6,
         "phi_ms": phi_ms,
@@ -155,12 +167,15 @@ def measure_cell(
         "flops": cost.flops,
         "hbm_bytes": cost.hbm_bytes,
         "collective_bytes": cost.collective_bytes,
+        "watts_proxy": watts,
+        "energy_j": watts * phi_ms / 1e3,
         # Per-op-class ledger breakdown (sums reproduce the three scalars
-        # above exactly — the costmodel parity contract) + the fingerprint
+        # above exactly — the costmodel parity contract; the energy bucket
+        # is the envelope-priced per-op dynamic joules) + the fingerprint
         # of the device constants this cell was measured under, checked at
         # fit time against the spec that will featurize it.
-        "cost_classes": cost.ledger.class_sums(),
-        "device_fingerprint": resolve_device(cell.device).fingerprint(),
+        "cost_classes": price_ledger_energy(cost.ledger, dev).class_sums(),
+        "device_fingerprint": dev.fingerprint(),
         "temp_mb": mb["temp"] / 1e6,
         "arg_mb": mb["arg"] / 1e6,
         "n_devices": int(mesh.devices.size),

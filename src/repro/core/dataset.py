@@ -77,6 +77,9 @@ class Datapoint:
     seed: int
     gamma_mb: float
     phi_ms: float
+    # Measured step energy in joules; 0.0 = no power rail sampled (the
+    # calibration energy fit then targets the envelope watts-proxy).
+    energy_j: float = 0.0
     features: list[float] = field(default_factory=list)
 
     @property

@@ -103,10 +103,13 @@ class OpCost:
     ``flops``/``hbm_bytes``/``collective_bytes`` are effective totals with
     ``trip_multiplier`` already applied (a dot inside a 12-trip scanned
     layer records its full 12× contribution and ``trip_multiplier=12``).
-    ``vmem_bytes`` is the on-chip working set — zero for parsed HLO
-    records, populated by the kernel tiling models.  ``origin`` names the
-    computation (or kernel) the op came from; ``count`` supports merged
-    group records (``CostLedger.class_sums``)."""
+    ``energy_j`` is the op's *dynamic* energy in joules — zero until a
+    device prices the ledger (``engine.decompose.price_ledger_energy``);
+    the static/idle term is per-step, not per-op, so it never appears in
+    a record.  ``vmem_bytes`` is the on-chip working set — zero for parsed
+    HLO records, populated by the kernel tiling models.  ``origin`` names
+    the computation (or kernel) the op came from; ``count`` supports
+    merged group records (``CostLedger.class_sums``)."""
 
     op: str = ""
     op_class: str = "other"
@@ -114,6 +117,7 @@ class OpCost:
     flops: float = 0.0
     hbm_bytes: float = 0.0
     collective_bytes: float = 0.0
+    energy_j: float = 0.0
     vmem_bytes: float = 0.0
     trip_multiplier: float = 1.0
     origin: str = ""
@@ -128,14 +132,15 @@ class OpCost:
         return cls(**{k: v for k, v in d.items() if k in known})
 
 
-# Numeric NPZ columns (strings ride in the JSON header).
+# Numeric NPZ columns (strings ride in the JSON header).  ``energy_j``
+# is last so pre-energy NPZ files load with the column defaulted.
 _NUM_COLS = ("flops", "hbm_bytes", "collective_bytes", "vmem_bytes",
-             "trip_multiplier", "count")
+             "trip_multiplier", "count", "energy_j")
 _STR_COLS = ("op", "op_class", "dtype", "origin")
 
 # One class bucket — what class_sums/merge_class_sums accumulate.
 _ZERO_BUCKET = {"flops": 0.0, "hbm_bytes": 0.0, "collective_bytes": 0.0,
-                "count": 0}
+                "energy_j": 0.0, "count": 0}
 
 
 def _empty_class_sums() -> dict[str, dict]:
@@ -197,9 +202,17 @@ class CostLedger:
             total += r.collective_bytes
         return total
 
+    @property
+    def energy_j(self) -> float:
+        total = 0.0
+        for r in self.records:
+            total += r.energy_j
+        return total
+
     def totals(self) -> dict:
         return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
-                "collective_bytes": self.collective_bytes}
+                "collective_bytes": self.collective_bytes,
+                "energy_j": self.energy_j}
 
     # -- attribution views --------------------------------------------------
 
@@ -213,6 +226,7 @@ class CostLedger:
             s["flops"] += r.flops
             s["hbm_bytes"] += r.hbm_bytes
             s["collective_bytes"] += r.collective_bytes
+            s["energy_j"] += r.energy_j
             s["count"] += r.count
         return sums if keep_zero else _drop_zero_classes(sums)
 
@@ -244,7 +258,8 @@ class CostLedger:
         whole-module ledger → per-microbatch)."""
         return CostLedger([
             replace(r, flops=r.flops * mult, hbm_bytes=r.hbm_bytes * mult,
-                    collective_bytes=r.collective_bytes * mult)
+                    collective_bytes=r.collective_bytes * mult,
+                    energy_j=r.energy_j * mult)
             for r in self.records
         ])
 
@@ -291,7 +306,9 @@ class CostLedger:
                 header = json.loads(bytes(z["ledger_header"].tobytes()).decode())
                 n = len(header[_STR_COLS[0]]) if header[_STR_COLS[0]] else \
                     int(z[_NUM_COLS[0]].shape[0])
-                cols = {c: z[c] for c in _NUM_COLS}
+                # Tolerant of columns added after a file was written
+                # (pre-energy NPZs lack "energy_j" — defaulted to 0).
+                cols = {c: z[c] for c in _NUM_COLS if c in z}
                 return cls([
                     OpCost(
                         op=header["op"][i], op_class=header["op_class"][i],
@@ -299,6 +316,8 @@ class CostLedger:
                         flops=float(cols["flops"][i]),
                         hbm_bytes=float(cols["hbm_bytes"][i]),
                         collective_bytes=float(cols["collective_bytes"][i]),
+                        energy_j=float(cols["energy_j"][i])
+                        if "energy_j" in cols else 0.0,
                         vmem_bytes=float(cols["vmem_bytes"][i]),
                         trip_multiplier=float(cols["trip_multiplier"][i]),
                         count=int(cols["count"][i]),

@@ -25,11 +25,14 @@ from repro.core.features import FEATURE_NAMES, feature_matrix
 from repro.core.predictor import Perf4Sight
 from repro.engine.decompose import (
     classwise_seconds,
+    cnn_energy_class_joules,
+    energy_terms,
     latency_class_columns,
     latency_terms,
     ledger_latency_columns,
     lm_roofline_terms,
     memory_terms,
+    price_ledger_energy,
 )
 from repro.engine.devices import DeviceSpec, resolve_device
 from repro.engine.types import (
@@ -46,6 +49,11 @@ __all__ = [
     "ProfilerBackend",
     "EnsembleBackend",
 ]
+
+# CNN energy-fit column → ledger op class, for the per-class breakdown the
+# fitted path reports (the columns are already class-labelled).
+_CNN_COL2CLS = {"flops_matmul": "matmul", "hbm_elementwise": "elementwise",
+                "hbm_data_movement": "data_movement"}
 
 
 class ForestBackend:
@@ -108,13 +116,22 @@ class ForestBackend:
                     gamma_mb=float(g[j]), phi_ms=float(p[j]), source=self.name)
         if lm_idx:
             lm = self._lm_forest()
-            g, p = lm.predict_queries([queries[i] for i in lm_idx])
+            lm_queries = [queries[i] for i in lm_idx]
+            g, p = lm.predict_queries(lm_queries)
+            # Energy is an optional forest attribute (campaigns recorded
+            # before the watts-proxy column fit no energy model) —
+            # getattr so pre-energy forests and test fakes keep working.
+            e = None
+            predict_energy = getattr(lm, "predict_energy", None)
+            if callable(predict_energy) and getattr(lm, "energy_fitted", False):
+                e = predict_energy(lm_queries)
             detail = {"lm": True, "device": lm.default_device.name,
                       "plan_hash": lm.meta.get("plan_hash")}
             for j, i in enumerate(lm_idx):
                 results[i] = CostEstimate(
-                    gamma_mb=float(g[j]), phi_ms=float(p[j]), source=self.name,
-                    detail=dict(detail))
+                    gamma_mb=float(g[j]), phi_ms=float(p[j]),
+                    energy_j=float(e[j]) if e is not None else 0.0,
+                    source=self.name, detail=dict(detail))
         return results
 
 
@@ -226,14 +243,46 @@ class AnalyticalBackend:
                 coeffs))[0]) * 1e3
         else:
             phi_ms = dev.combine_terms(compute_s, memory_s) * 1e3
+
+        # Energy: fitted class-wise constants when calibration found them
+        # (train stage — where they were fitted), the device power envelope
+        # otherwise.  Either way the per-class breakdown re-sums to the
+        # dynamic aggregate (the columns sum to the aggregate terms).
+        cols = (latency_class_columns(feats, self.bytes_per_el)
+                if q.stage == STAGE_TRAIN else None)
+        e_coeffs = dev.class_coeffs.get("cnn_energy")
+        energy_classes = None
+        if dev.calibrated and e_coeffs and cols is not None:
+            energy_j = float(np.atleast_1d(
+                classwise_seconds(cols, e_coeffs))[0])
+            energy_fit = "fitted"
+            energy_classes = {
+                _CNN_COL2CLS[name]: float(e_coeffs.get(name, 0.0)
+                                          * np.atleast_1d(col)[0])
+                for name, col in cols.items()}
+        else:
+            static_j, comp_j, mem_j, _ = energy_terms(
+                flops, bytes_moved, phi_ms / 1e3, dev)
+            energy_j = float(np.atleast_1d(static_j + comp_j + mem_j)[0])
+            energy_fit = "envelope"
+            if cols is not None:
+                energy_classes = {
+                    k: float(np.atleast_1d(v)[0]) for k, v in
+                    cnn_energy_class_joules(feats, self.bytes_per_el,
+                                            dev).items()}
+
+        detail = {"compute_s": float(compute_s), "memory_s": float(memory_s),
+                  "device": dev.name, "calibrated": dev.calibrated,
+                  "latency_fit": "classwise" if (dev.calibrated and coeffs
+                                                 and q.stage == STAGE_TRAIN)
+                  else "aggregate",
+                  "energy_fit": energy_fit,
+                  "dominant": "compute" if compute_s >= memory_s else "memory"}
+        if energy_classes is not None:
+            detail["energy_classes"] = energy_classes
         return CostEstimate(
-            gamma_mb=float(gamma_mb), phi_ms=float(phi_ms), source=self.name,
-            detail={"compute_s": float(compute_s), "memory_s": float(memory_s),
-                    "device": dev.name, "calibrated": dev.calibrated,
-                    "latency_fit": "classwise" if (dev.calibrated and coeffs
-                                                   and q.stage == STAGE_TRAIN)
-                    else "aggregate",
-                    "dominant": "compute" if compute_s >= memory_s else "memory"})
+            gamma_mb=float(gamma_mb), phi_ms=float(phi_ms),
+            energy_j=energy_j, source=self.name, detail=detail)
 
     # -- LM HLO/roofline path -------------------------------------------------
 
@@ -303,7 +352,12 @@ class AnalyticalBackend:
         gamma_mb = dev.round_alloc(
             mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6
         cost = parse_hlo_cost(compiled.as_text())
-        class_sums = cost.ledger.class_sums()
+        # Price per-op dynamic energy into the ledger before taking class
+        # sums: the breakdown every consumer sees (cost_classes) then
+        # carries an energy bucket whose class sums re-sum to the ledger
+        # aggregate — the same parity contract as flops/bytes.
+        eledger = price_ledger_energy(cost.ledger, dev)
+        class_sums = eledger.class_sums()
         compute_s, memory_s, coll_s = (
             float(v) for v in lm_roofline_terms(
                 cost.flops, cost.hbm_bytes, cost.collective_bytes, dev))
@@ -317,12 +371,29 @@ class AnalyticalBackend:
         else:
             phi_ms = dev.combine_terms(compute_s, memory_s, coll_s) * 1e3
         terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+
+        # Energy: campaign-fitted constants when present, envelope pricing
+        # otherwise (static idle term + the per-op dynamic joules above).
+        e_coeffs = dev.class_coeffs.get("lm_energy")
+        static_j = dev.idle_w * (phi_ms / 1e3)
+        if e_coeffs:
+            energy_j = float(np.atleast_1d(classwise_seconds(
+                ledger_latency_columns([class_sums]), e_coeffs))[0])
+            energy_fit = "fitted"
+        else:
+            energy_j = float(static_j + eledger.energy_j)
+            energy_fit = "envelope"
         return CostEstimate(
-            gamma_mb=float(gamma_mb), phi_ms=float(phi_ms), source=self.name,
+            gamma_mb=float(gamma_mb), phi_ms=float(phi_ms),
+            energy_j=energy_j, source=self.name,
             detail={"flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
                     "collective_bytes": cost.collective_bytes,
                     "cost_classes": class_sums,
                     "latency_fit": "classwise" if coeffs else "aggregate",
+                    "energy_fit": energy_fit,
+                    "energy_static_j": float(static_j),
+                    "energy_classes": {cls: s["energy_j"]
+                                       for cls, s in class_sums.items()},
                     "dominant": max(terms, key=terms.get),
                     "device": dev.name,
                     "compile_s": compile_s, "reduced": reduced})

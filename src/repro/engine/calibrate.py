@@ -330,6 +330,54 @@ def calibrate(
     # Memory: gamma = m0 + m1·weight_mb + m2·act_mb, m ≥ 0.
     m = nnls(np.stack([ones, weight_mb, act_mb], axis=1), gamma_mb)
 
+    # Energy: fitted exactly like latency — aggregate AND class-wise NNLS
+    # over the same decompose columns, lower MAPE applied.  Ground truth
+    # per workload is the datapoint's measured joules when a power rail
+    # was sampled, else the base envelope's watts-proxy at the MEASURED
+    # phi (decompose.watts_proxy).  A zero-watt base envelope yields
+    # all-zero targets and the energy fit is skipped (energy_fit="none").
+    # Either winning fit is stored over the class-column names (the
+    # aggregate's tied byte coefficient mapped onto both byte columns) so
+    # pricing stays one code path: classwise_seconds(·, "cnn_energy").
+    from repro.engine.decompose import watts_proxy
+
+    energy_true = np.array([getattr(dp, "energy_j", 0.0) or 0.0 for dp in dps],
+                           dtype=np.float64)
+    proxied = energy_true <= 0
+    if proxied.any():
+        energy_true = np.where(
+            proxied, watts_proxy(flops, phi_s, base) * phi_s, energy_true)
+    class_coeffs.pop("cnn_energy", None)
+    energy_meta: dict = {"energy_fit": "none"}
+    if np.any(energy_true > 0):
+        # Timed tuning rows carry no energy measurement: fit on the
+        # workload rows only.
+        e = nnls(A_lat[:n_work], energy_true)
+        e_cls = nnls(A_cls[:n_work], energy_true)
+        e_mape_agg = _mape(A_lat[:n_work] @ e, energy_true)
+        e_mape_cls = _mape(A_cls[:n_work] @ e_cls, energy_true)
+        use_classwise_e = e_mape_cls <= e_mape_agg
+        if use_classwise_e:
+            class_coeffs["cnn_energy"] = {
+                "_intercept": float(e_cls[0]),
+                **{n: float(v) for n, v in zip(CNN_LATENCY_COLUMNS,
+                                               e_cls[1:])},
+            }
+        else:
+            class_coeffs["cnn_energy"] = {
+                "_intercept": float(e[0]),
+                "flops_matmul": float(e[1]),
+                "hbm_elementwise": float(e[2]),
+                "hbm_data_movement": float(e[2]),
+            }
+        energy_meta = {
+            "energy_fit": "classwise" if use_classwise_e else "aggregate",
+            "energy_mape": min(e_mape_cls, e_mape_agg),
+            "energy_mape_aggregate": e_mape_agg,
+            "energy_mape_classwise": e_mape_cls,
+            "energy_proxied": int(proxied.sum()),
+        }
+
     spec = replace(
         base,
         name=name or f"{base.name}_calibrated",
@@ -353,6 +401,7 @@ def calibrate(
             "phi_mape_classwise": phi_mape_cls,
             "gamma_mape": _mape(m[0] + m[1] * weight_mb + m[2] * act_mb,
                                 gamma_mb),
+            **energy_meta,
         },
     )
     if apply:

@@ -15,6 +15,8 @@ and return per-row arrays.
 
 from __future__ import annotations
 
+from dataclasses import replace
+
 import numpy as np
 
 from repro.core.features import FEATURE_NAMES
@@ -24,6 +26,10 @@ __all__ = [
     "latency_terms",
     "memory_terms",
     "lm_roofline_terms",
+    "energy_terms",
+    "watts_proxy",
+    "price_ledger_energy",
+    "cnn_energy_class_joules",
     "CNN_LATENCY_COLUMNS",
     "latency_class_columns",
     "LM_LATENCY_COLUMNS",
@@ -67,6 +73,82 @@ def lm_roofline_terms(
     collective_bytes = np.asarray(collective_bytes, dtype=np.float64)
     return (flops / device.peak_flops, hbm_bytes / device.hbm_bw,
             collective_bytes / device.ici_bw)
+
+
+# ---------------------------------------------------------------------------
+# Energy (PowerTrain-style: board power = idle + dynamic × utilisation).
+#
+# The dynamic energy of a roofline phase is its busy time × the device's
+# dynamic power range, so every term below is an existing latency term
+# multiplied by ``dynamic_w`` — the energy decomposition inherits the
+# latency decomposition's single-source-of-truth contract for free, and
+# per-class energy re-sums to the aggregate exactly like the latency
+# columns do.  The static term (``idle_w × phi``) is per-step, kept
+# separate from the per-op dynamic terms.
+# ---------------------------------------------------------------------------
+
+
+def energy_terms(flops, hbm_bytes, phi_s, device, collective_bytes=0.0
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(static_j, compute_j, memory_j, collective_j) per workload row.
+
+    ``static_j = idle_w × phi_s`` (whatever the step's wall time is —
+    measured or predicted); the dynamic terms are the roofline busy
+    seconds × ``dynamic_w``.  A zero-watt envelope returns all zeros."""
+    dyn = device.dynamic_w
+    static_j = device.idle_w * np.asarray(phi_s, dtype=np.float64)
+    compute_s, memory_s, coll_s = lm_roofline_terms(
+        flops, hbm_bytes, collective_bytes, device)
+    return static_j, dyn * compute_s, dyn * memory_s, dyn * coll_s
+
+
+def watts_proxy(flops, phi_s, device) -> np.ndarray:
+    """Modelled average board draw of a measured step: idle plus the
+    dynamic range scaled by compute-roofline utilisation (busy seconds /
+    measured wall seconds, clamped to 1).  The campaign runner records
+    this per cell and calibration uses it as the energy ground-truth
+    proxy when no power rail was sampled."""
+    compute_s = np.asarray(flops, dtype=np.float64) / device.peak_flops
+    phi = np.asarray(phi_s, dtype=np.float64)
+    util = np.where(phi > 0.0,
+                    np.minimum(1.0, compute_s / np.maximum(phi, 1e-300)),
+                    0.0)
+    return device.idle_w + device.dynamic_w * util
+
+
+def price_ledger_energy(ledger: CostLedger, device) -> CostLedger:
+    """A copy of ``ledger`` with every record's dynamic energy stamped:
+    ``energy_j = flops·(dyn/peak) + hbm·(dyn/bw) + coll·(dyn/ici)``.
+
+    Parity contract (same as flops/bytes): the per-class energy sums of
+    the returned ledger re-sum to its aggregate ``energy_j`` —
+    bit-identically when the envelope constants are powers of two
+    (tested), within 1e-9 relative otherwise (bench-gated)."""
+    dyn = device.dynamic_w
+    kf = dyn / device.peak_flops
+    kb = dyn / device.hbm_bw
+    kc = dyn / device.ici_bw
+    return CostLedger([
+        replace(r, energy_j=(r.flops * kf + r.hbm_bytes * kb
+                             + r.collective_bytes * kc))
+        for r in ledger
+    ])
+
+
+def cnn_energy_class_joules(feats: np.ndarray, bytes_per_el: int, device
+                            ) -> dict[str, np.ndarray]:
+    """Per-class dynamic energy of a CNN training step, keyed by op class
+    (``matmul``/``elementwise``/``data_movement``).  The values sum to the
+    aggregate dynamic energy of :func:`energy_terms` because the underlying
+    latency class columns sum to the aggregate terms."""
+    cols = latency_class_columns(feats, bytes_per_el)
+    kf = device.dynamic_w / device.peak_flops
+    kb = device.dynamic_w / device.hbm_bw
+    return {
+        "matmul": cols["flops_matmul"] * kf,
+        "elementwise": cols["hbm_elementwise"] * kb,
+        "data_movement": cols["hbm_data_movement"] * kb,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,7 @@ from dataclasses import asdict, dataclass, field, replace
 __all__ = [
     "DeviceSpec",
     "DEVICE_REGISTRY",
+    "POWER_MODE_FIELDS",
     "get_device",
     "register_device",
     "list_devices",
@@ -60,10 +61,18 @@ FITTED_FIELDS = (
     "mem_weight_scale",
     "mem_act_scale",
     "mem_base_mb",
+    "idle_w",
+    "peak_w",
+    "power_modes",
     "combine",
     "calibrated",
     "class_coeffs",
 )
+
+# DeviceSpec fields a named power-mode entry may override (a nvpmodel-style
+# mode caps the power budget *and* the clocks, so the roofline denominators
+# are legitimately part of a mode).
+POWER_MODE_FIELDS = ("idle_w", "peak_w", "peak_flops", "hbm_bw")
 
 
 @dataclass(frozen=True)
@@ -87,6 +96,16 @@ class DeviceSpec:
     with byte totals rounded up to ``alloc_granularity``.  The uncalibrated
     defaults (scale 1, base 0, granularity 1) leave the raw Appendix-B
     allocation totals untouched.
+
+    Power envelope (PowerTrain / the Jetson characterization papers):
+    ``idle_w`` is the board's static draw, ``peak_w`` its full-utilisation
+    draw; the dynamic range ``max(peak_w - idle_w, 0)`` scales with
+    roofline utilisation to give analytical energy (see
+    ``engine/decompose.energy_terms``).  ``power_modes`` optionally names
+    nvpmodel-style operating points (``{"MAXQ": {"peak_w": 7.5, ...}}``,
+    each entry overriding :data:`POWER_MODE_FIELDS`); apply one with
+    :meth:`with_power_mode`.  The zero-watt default keeps envelope energy
+    inert (0 J) on specs that never declared one.
     """
 
     name: str
@@ -99,8 +118,14 @@ class DeviceSpec:
     mem_weight_scale: float = 1.0      # measured MB per modeled weight MB
     mem_act_scale: float = 1.0         # measured MB per modeled activation MB
     mem_base_mb: float = 0.0           # fixed runtime footprint
+    idle_w: float = 0.0                # static board draw (W)
+    peak_w: float = 0.0                # full-utilisation draw (W)
     combine: str = "max"               # "max" roofline | "sum" calibrated
     calibrated: bool = False
+    # Named operating points (nvpmodel-style): {mode: {field: value}} with
+    # fields restricted to POWER_MODE_FIELDS.  hash=False for the same
+    # reason as class_coeffs below.
+    power_modes: dict = field(default_factory=dict, hash=False)
     # Class-wise fitted constants (the per-op cost ledger refactor): maps a
     # fit family ("cnn_latency", "lm_latency") to {column: seconds-per-unit}
     # coefficients over the engine/decompose class columns, with the fit's
@@ -117,8 +142,33 @@ class DeviceSpec:
             raise ValueError(f"combine must be 'max' or 'sum', got {self.combine!r}")
         if self.alloc_granularity < 1:
             raise ValueError(f"alloc_granularity must be >= 1: {self}")
+        if self.idle_w < 0 or self.peak_w < 0:
+            raise ValueError(f"negative power envelope: {self}")
+        for mode, entry in self.power_modes.items():
+            bad = set(entry) - set(POWER_MODE_FIELDS)
+            if bad:
+                raise ValueError(
+                    f"power mode {mode!r} overrides non-mode fields {sorted(bad)}"
+                    f" (allowed: {POWER_MODE_FIELDS})")
 
     # -- prediction helpers --------------------------------------------------
+
+    @property
+    def dynamic_w(self) -> float:
+        """Utilisation-scaled power range.  Clamped at 0 so a partially
+        declared envelope (idle only) stays inert rather than negative."""
+        return max(self.peak_w - self.idle_w, 0.0)
+
+    def with_power_mode(self, mode: str) -> "DeviceSpec":
+        """The spec at a named operating point: ``power_modes[mode]``
+        overrides applied, name suffixed ``@mode``, fingerprint distinct."""
+        try:
+            entry = self.power_modes[mode]
+        except KeyError:
+            raise KeyError(
+                f"device {self.name!r} has no power mode {mode!r}; "
+                f"available: {sorted(self.power_modes)}") from None
+        return replace(self, name=f"{self.name}@{mode}", **entry)
 
     def combine_terms(self, *terms_s: float) -> float:
         """Fold roofline terms into seconds, plus the launch overhead."""
@@ -210,6 +260,8 @@ register_device(DeviceSpec(
     hbm_bw=2e10,
     ici_bw=1e9,             # loopback; collectives are degenerate
     hbm_bytes=4e9,
+    idle_w=10.0,            # desktop-class package idle
+    peak_w=65.0,            # typical TDP
 ))
 
 register_device(DeviceSpec(
@@ -220,6 +272,18 @@ register_device(DeviceSpec(
     hbm_bytes=8e9,          # unified memory
     launch_overhead_s=2e-4, # CUDA kernel dispatch per step (order-of-magnitude)
     alloc_granularity=512,  # CUDA caching-allocator block rounding
+    idle_w=1.4,             # module idle, board rails excluded
+    peak_w=15.0,            # MAXN budget
+    # nvpmodel-style operating points (Jetson characterization paper):
+    # MAXQ caps the budget at 7.5 W by halving clocks — the roofline
+    # denominators move with the envelope, not just the watts.
+    power_modes={
+        "MAXN": {"idle_w": 1.4, "peak_w": 15.0},
+        "MAXQ": {"idle_w": 1.4, "peak_w": 7.5,
+                 "peak_flops": 0.67e12, "hbm_bw": 40.6e9},
+        "MAXP_CORE_ALL": {"idle_w": 1.4, "peak_w": 11.0,
+                          "peak_flops": 1.12e12},
+    },
 ))
 
 register_device(DeviceSpec(
@@ -228,6 +292,8 @@ register_device(DeviceSpec(
     hbm_bw=819e9,
     ici_bw=50e9,
     hbm_bytes=16e9,
+    idle_w=55.0,            # order-of-magnitude chip+HBM idle
+    peak_w=170.0,
 ))
 
 
@@ -300,10 +366,11 @@ def save_device_spec(path: str, spec: DeviceSpec) -> None:
         arrays = {
             f: np.asarray(getattr(spec, f))
             for f in FITTED_FIELDS
-            if f not in ("combine", "class_coeffs")
+            if f not in ("combine", "class_coeffs", "power_modes")
         }
         header = json.dumps({"name": spec.name, "combine": spec.combine,
                              "class_coeffs": spec.class_coeffs,
+                             "power_modes": spec.power_modes,
                              "meta": spec.meta})
         arrays["header"] = np.frombuffer(header.encode(), dtype=np.uint8)
         atomic_write_bytes(path, lambda f: np.savez_compressed(f, **arrays),
@@ -319,11 +386,13 @@ def load_device_spec(path: str) -> DeviceSpec:
         with np.load(path) as z:
             header = json.loads(bytes(z["header"].tobytes()).decode())
             d = {f: z[f].item() for f in FITTED_FIELDS
-                 if f not in ("combine", "class_coeffs") and f in z}
+                 if f not in ("combine", "class_coeffs", "power_modes")
+                 and f in z}
             d["alloc_granularity"] = int(d["alloc_granularity"])
             d["calibrated"] = bool(d["calibrated"])
             d.update(name=header["name"], combine=header["combine"],
                      class_coeffs=header.get("class_coeffs", {}),
+                     power_modes=header.get("power_modes", {}),
                      meta=header.get("meta", {}))
             return DeviceSpec(**d)
     with open(path) as f:

@@ -135,22 +135,27 @@ class CostEngine:
         *,
         gamma_budget_mb: float | None = None,
         phi_budget_ms: float | None = None,
+        energy_budget_j: float | None = None,
         safety_margin: float = 0.1,
     ) -> tuple[bool, dict]:
         """Admission gate (paper §6.4 safety property), backend-agnostic:
-        refuse when the predicted footprint/latency, inflated by
-        ``safety_margin``, exceeds the budget.  With an engine-level device
-        and no explicit memory budget, the device's capacity is the budget.
+        refuse when the predicted footprint/latency/step-energy, inflated
+        by ``safety_margin``, exceeds the budget.  With an engine-level
+        device and no explicit memory budget, the device's capacity is the
+        budget.
         """
         if gamma_budget_mb is None and self.device is not None:
             gamma_budget_mb = self.device.hbm_bytes / 1e6
         est = self.estimate_one(query)
         g_eff = est.gamma_mb * (1 + safety_margin)
         p_eff = est.phi_ms * (1 + safety_margin)
+        e_eff = est.energy_j * (1 + safety_margin)
         ok = not (
             (gamma_budget_mb is not None and g_eff > gamma_budget_mb)
             or (phi_budget_ms is not None and p_eff > phi_budget_ms)
+            or (energy_budget_j is not None and e_eff > energy_budget_j)
         )
         return ok, {"gamma_mb": est.gamma_mb, "phi_ms": est.phi_ms,
+                    "energy_j": est.energy_j,
                     "gamma_eff": g_eff, "phi_eff": p_eff,
-                    "source": est.source}
+                    "energy_eff": e_eff, "source": est.source}

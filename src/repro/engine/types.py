@@ -100,21 +100,31 @@ class CostQuery:
 
 @dataclass
 class CostEstimate:
-    """Predicted (Γ memory, Φ latency) for one query, tagged with the backend
-    that produced it."""
+    """Predicted (Γ memory, Φ latency, E energy) for one query, tagged with
+    the backend that produced it.
+
+    ``energy_j`` is the predicted per-step energy in joules — 0.0 when the
+    answering backend has no power model (zero-watt device envelope, forest
+    without an energy fit).  Per-class attribution rides in
+    ``detail["energy_classes"]`` when the analytical path answered."""
 
     gamma_mb: float
     phi_ms: float
+    energy_j: float = 0.0
     source: str = ""
     detail: dict = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {"gamma_mb": self.gamma_mb, "phi_ms": self.phi_ms,
+                "energy_j": self.energy_j,
                 "source": self.source, "detail": self.detail}
 
     @classmethod
     def from_dict(cls, d: dict) -> "CostEstimate":
+        # .get: estimate caches written before the energy attribute load
+        # with energy defaulted, not invalidated.
         return cls(gamma_mb=float(d["gamma_mb"]), phi_ms=float(d["phi_ms"]),
+                   energy_j=float(d.get("energy_j", 0.0)),
                    source=d.get("source", ""), detail=d.get("detail", {}))
 
 

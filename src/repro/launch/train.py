@@ -43,6 +43,11 @@ def main() -> None:
                     help="admission gate: refuse if predicted HBM (inflated "
                          "by --admission-margin) exceeds this; defaults to "
                          "the --device capacity when a device is given")
+    ap.add_argument("--energy-budget-j", type=float, default=None,
+                    help="admission gate: refuse if the predicted step "
+                         "energy (inflated by --admission-margin) exceeds "
+                         "this many joules — the edge power/thermal "
+                         "envelope check")
     ap.add_argument("--admission-margin", type=float, default=0.1,
                     help="safety margin applied to the predicted footprint "
                          "before comparing to the budget (0 = exact)")
@@ -61,7 +66,7 @@ def main() -> None:
 
     admission = None
     if (args.memory_budget_gb is not None or args.device is not None
-            or args.lm_forest is not None):
+            or args.lm_forest is not None or args.energy_budget_j is not None):
         from repro.engine import (
             AnalyticalBackend,
             CostEngine,
@@ -91,9 +96,11 @@ def main() -> None:
                           reduced=args.reduced),
                 gamma_budget_mb=(args.memory_budget_gb * 1e3
                                  if args.memory_budget_gb is not None else None),
+                energy_budget_j=args.energy_budget_j,
                 safety_margin=args.admission_margin,
             )
             info["predicted_gb"] = info["gamma_mb"] / 1e3
+            info["predicted_energy_j"] = info["energy_j"]
             if device is not None:
                 info["device"] = device.name
             return ok, info

@@ -35,7 +35,12 @@ from repro.configs.base import ArchConfig
 from repro.models import transformer as T
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.request import Request, RequestState
-from repro.serve.scheduler import Decision, ServeSLO, SLOScheduler
+from repro.serve.scheduler import (
+    Decision,
+    PlacementRefused,
+    ServeSLO,
+    SLOScheduler,
+)
 
 __all__ = ["ContinuousConfig", "ContinuousEngine"]
 
@@ -57,6 +62,7 @@ class ContinuousConfig:
     block_size: int | None = None     # None → serve_kv tiling via TuningCache
     pool_tokens: int | None = None    # None → n_slots·max_len / 2 budget
     gamma_budget_mb: float | None = None
+    energy_budget_j: float | None = None   # per-step power/thermal envelope
     safety_margin: float = 0.1
     slo: ServeSLO = field(default_factory=ServeSLO)
 
@@ -78,6 +84,7 @@ class ContinuousEngine:
                 cfg, cost_engine,
                 max_len=scfg.max_len, n_slots=scfg.n_slots,
                 gamma_budget_mb=scfg.gamma_budget_mb,
+                energy_budget_j=scfg.energy_budget_j,
                 safety_margin=scfg.safety_margin, slo=scfg.slo)
 
         self.queue: deque[Request] = deque()
@@ -143,6 +150,22 @@ class ContinuousEngine:
     def _admissions(self) -> None:
         while self.queue and None in self.slots:
             req = self.queue[0]
+            # Context-window check in the engine itself, not only the
+            # scheduler: an ungated engine (cost_engine=None) must REFUSE
+            # an oversized prompt cleanly instead of crashing in
+            # ``_prefill_into`` (width - prompt_len goes negative).
+            need = req.prompt_len + req.max_new_tokens
+            if need > self.scfg.max_len:
+                self.queue.popleft()
+                req.state = RequestState.REFUSED
+                req.refusal = PlacementRefused(
+                    f"request {req.rid} (prompt={req.prompt_len}, "
+                    f"max_new={req.max_new_tokens}) refused: needs {need} "
+                    f"tokens > max_len={self.scfg.max_len}",
+                    {"reason": f"needs {need} tokens > "
+                               f"max_len={self.scfg.max_len}"})
+                self.refused.append(req)
+                continue
             if self.scheduler is not None:
                 decision, info = self.scheduler.admit(
                     req, n_running=self.n_running)

@@ -8,15 +8,24 @@ over the full context window) through the same forest→analytical
 
 * predicted memory footprint (× safety margin) against the
   ``DeviceSpec`` HBM envelope / explicit ``gamma_budget_mb``;
+* predicted step energy (× safety margin) against an explicit
+  ``energy_budget_j`` power/thermal envelope;
 * a per-token latency proxy (``phi_ms / max_len`` of the composed
   batch) against the request's latency SLO;
+* a time-to-first-token proxy (the request's own prefill priced at
+  ``bs=1`` over its prompt) against ``ServeSLO.ttft_ms``;
 * the request's own token need against the context window.
 
-Decisions are ``ADMIT`` (join now), ``DEFER`` (temporarily out of
-slots/KV blocks — the engine retries next step), or ``REFUSE`` — a
-:class:`PlacementRefused` carrying the estimate's ledger-class
-breakdown (``detail["cost_classes"]``) so operators see *which* cost
-class blew the budget, not just that one did.
+Decisions are ``ADMIT`` (join now), ``DEFER``, or ``REFUSE``, split by
+*whose fault the failure is*: a batch-dependent miss (memory/energy/
+latency at ``bs = running + 1``) that clears when the request is
+re-priced alone at ``bs=1`` is occupancy-transient — the engine keeps
+it queued and retries next step (``DEFER``); a miss that persists even
+alone (or a TTFT/context-window miss, which no amount of waiting
+fixes) is ``REFUSE`` — a :class:`PlacementRefused` carrying the
+estimate's ledger-class breakdown (``detail["cost_classes"]``, and
+``detail["energy_classes"]`` when energy was priced) so operators see
+*which* cost class blew the budget, not just that one did.
 
 The decision path is pure prediction: with a fitted ``LMForest`` behind
 the engine it triggers zero JAX compilations (asserted by
@@ -64,6 +73,7 @@ class SLOScheduler:
     def __init__(self, cfg: ArchConfig, cost_engine, *,
                  max_len: int, n_slots: int,
                  gamma_budget_mb: float | None = None,
+                 energy_budget_j: float | None = None,
                  safety_margin: float = 0.1,
                  slo: ServeSLO | None = None,
                  seq_bucket: int = 64):
@@ -85,6 +95,7 @@ class SLOScheduler:
         if budget is None and device is not None:
             budget = device.hbm_bytes / 1e6
         self.gamma_budget_mb = budget
+        self.energy_budget_j = energy_budget_j
         self.device = device
         self.unavailable: str | None = None   # backend couldn't score us
 
@@ -113,6 +124,54 @@ class SLOScheduler:
 
     # ------------------------------------------------------------------
 
+    def _gate_info(self, est, bs: int) -> dict:
+        """The gate's evidence for one priced batch composition."""
+        margin = 1 + self.safety_margin
+        info = {
+            "bs": bs, "seq": self.max_len,
+            "gamma_mb": est.gamma_mb, "gamma_eff": est.gamma_mb * margin,
+            "phi_ms": est.phi_ms, "source": est.source,
+            "budget_mb": self.gamma_budget_mb,
+        }
+        if self.energy_budget_j is not None or est.energy_j:
+            info["energy_j"] = est.energy_j
+            info["energy_eff"] = est.energy_j * margin
+            info["energy_budget_j"] = self.energy_budget_j
+        if self.device is not None:
+            info["device"] = self.device.name
+        detail = est.detail or {}
+        if detail.get("cost_classes") is not None:
+            info["cost_classes"] = detail["cost_classes"]
+        if detail.get("energy_classes") is not None:
+            info["energy_classes"] = detail["energy_classes"]
+        return info
+
+    def _batch_reason(self, est, request, bs: int, info: dict) -> str | None:
+        """First batch-dependent gate the composed batch fails (None = all
+        pass).  These are the checks that can clear at lower occupancy —
+        the DEFER candidates; occupancy-independent gates (context window,
+        TTFT) live in :meth:`admit` directly."""
+        margin = 1 + self.safety_margin
+        if (self.gamma_budget_mb is not None
+                and est.gamma_mb * margin > self.gamma_budget_mb):
+            return (f"predicted {est.gamma_mb * margin:.0f}MB effective "
+                    f"footprint at bs={bs} > budget "
+                    f"{self.gamma_budget_mb:.0f}MB")
+        if (self.energy_budget_j is not None
+                and est.energy_j * margin > self.energy_budget_j):
+            return (f"predicted {est.energy_j * margin:.3g}J effective step "
+                    f"energy at bs={bs} > budget {self.energy_budget_j:.3g}J")
+        slo_ms = request.slo_ms
+        if slo_ms is None:
+            slo_ms = self.slo.tpot_ms
+        if slo_ms is not None:
+            tpot = est.phi_ms / self.max_len * margin
+            info["tpot_proxy_ms"] = tpot
+            if tpot > slo_ms:
+                return (f"per-token proxy {tpot:.3f}ms at bs={bs} "
+                        f"> SLO {slo_ms:.3f}ms")
+        return None
+
     def admit(self, request, *, n_running: int) -> tuple[Decision, dict]:
         """Price the composed batch and decide.  Never raises: a REFUSE
         returns the decision with the refusal info; the engine turns it
@@ -128,47 +187,56 @@ class SLOScheduler:
             # refusing workloads the model can't price (legacy behaviour)
             return Decision.ADMIT, {"skipped": self.unavailable}
 
-        margin = 1 + self.safety_margin
-        info = {
-            "bs": n_running + 1, "seq": self.max_len,
-            "gamma_mb": est.gamma_mb, "gamma_eff": est.gamma_mb * margin,
-            "phi_ms": est.phi_ms, "source": est.source,
-            "budget_mb": self.gamma_budget_mb,
-        }
-        if self.device is not None:
-            info["device"] = self.device.name
-        classes = (est.detail or {}).get("cost_classes")
-        if classes is not None:
-            info["cost_classes"] = classes
+        info = self._gate_info(est, n_running + 1)
 
-        if (self.gamma_budget_mb is not None
-                and info["gamma_eff"] > self.gamma_budget_mb):
-            info["reason"] = (
-                f"predicted {info['gamma_eff']:.0f}MB effective footprint "
-                f"at bs={n_running + 1} > budget {self.gamma_budget_mb:.0f}MB")
-            return Decision.REFUSE, info
+        # TTFT gate — occupancy-independent: the continuous engine
+        # prefills at B=1 over the prompt no matter who else is decoding,
+        # so a predicted miss can never clear by waiting → straight
+        # REFUSE, never DEFER.
+        if self.slo.ttft_ms is not None:
+            pest = self._estimate(1, request.prompt_len)
+            if pest is not None:
+                ttft = pest.phi_ms * (1 + self.safety_margin)
+                info["ttft_proxy_ms"] = ttft
+                if ttft > self.slo.ttft_ms:
+                    info["reason"] = (
+                        f"prefill proxy {ttft:.3f}ms for prompt="
+                        f"{request.prompt_len} > TTFT SLO "
+                        f"{self.slo.ttft_ms:.3f}ms")
+                    return Decision.REFUSE, info
 
-        slo_ms = request.slo_ms
-        if slo_ms is None:
-            slo_ms = self.slo.tpot_ms
-        if slo_ms is not None:
-            tpot = est.phi_ms / self.max_len * margin
-            info["tpot_proxy_ms"] = tpot
-            if tpot > slo_ms:
-                info["reason"] = (
-                    f"per-token proxy {tpot:.3f}ms at bs={n_running + 1} "
-                    f"> SLO {slo_ms:.3f}ms")
-                return Decision.REFUSE, info
+        reason = self._batch_reason(est, request, n_running + 1, info)
+        if reason is None:
+            return Decision.ADMIT, info
+        info["reason"] = reason
 
-        return Decision.ADMIT, info
+        # Batch-dependent miss: decide whose fault it is.  Re-priced
+        # alone (bs=1) and passing every gate → the current occupancy is
+        # the problem, not the request: DEFER, the engine retries next
+        # step as slots drain.  Failing even alone → it can never fit:
+        # REFUSE for good.
+        if n_running > 0:
+            alone = self._estimate(1, self.max_len)
+            if alone is not None and self._batch_reason(
+                    alone, request, 1, dict(info)) is None:
+                info["defer"] = "passes every gate alone at bs=1"
+                return Decision.DEFER, info
+        return Decision.REFUSE, info
 
     def refusal(self, request, info: dict) -> PlacementRefused:
         breakdown = ""
         if "cost_classes" in info:
+            def mag(v):
+                # Buckets come in two shapes: a scalar per class (forest
+                # detail) or a class_sums dict (analytical detail).
+                if isinstance(v, dict):
+                    return sum(float(x) for k, x in v.items()
+                               if k != "count")
+                return float(v)
             top = sorted(info["cost_classes"].items(),
-                         key=lambda kv: -float(kv[1]))[:3]
+                         key=lambda kv: -mag(kv[1]))[:3]
             breakdown = " [" + ", ".join(
-                f"{k}={float(v):.3g}" for k, v in top) + "]"
+                f"{k}={mag(v):.3g}" for k, v in top) + "]"
         return PlacementRefused(
             f"request {request.rid} (prompt={request.prompt_len}, "
             f"max_new={request.max_new_tokens}) refused: "

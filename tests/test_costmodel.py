@@ -139,11 +139,12 @@ class TestLedger:
     def test_totals_and_class_sums(self):
         led = self._ledger()
         assert led.totals() == {"flops": 100.0, "hbm_bytes": 45.0,
-                                "collective_bytes": 50.0}
+                                "collective_bytes": 50.0, "energy_j": 0.0}
         sums = led.class_sums()
         assert set(sums) == {"matmul", "elementwise", "collective"}
         assert sums["elementwise"] == {"flops": 0.0, "hbm_bytes": 30.0,
-                                       "collective_bytes": 0.0, "count": 1}
+                                       "collective_bytes": 0.0,
+                                       "energy_j": 0.0, "count": 1}
 
     def test_merge_class_sums_matches_ledger_view(self):
         led = self._ledger()

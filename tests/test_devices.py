@@ -107,6 +107,10 @@ def _bumped(spec: DeviceSpec, field: str) -> DeviceSpec:
         bumped["cnn_latency"] = {"_intercept": bumped.get(
             "cnn_latency", {}).get("_intercept", 0.0) + 1e-3}
         return dataclasses.replace(spec, class_coeffs=bumped)
+    if field == "power_modes":
+        bumped = dict(v)
+        bumped["_BUMP"] = {"peak_w": spec.peak_w + 1.0}
+        return dataclasses.replace(spec, power_modes=bumped)
     return dataclasses.replace(spec, **{field: v * 1.5 + 1e-6})
 
 

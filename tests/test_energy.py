@@ -1,0 +1,467 @@
+"""Energy as a first-class predicted cost attribute (ISSUE 7).
+
+Covers the whole chain: envelope pricing (watts proxy, per-op dynamic
+joules, the bit-identical ledger parity contract), planted-coefficient
+NNLS recovery on the CNN calibration and LM campaign paths (aggregate AND
+class-wise), the fitted forest → analytical energy path with zero jax
+compiles, energy-budget admission carrying the per-class breakdown, and
+the DeviceSpec power envelope (modes, fingerprint, persistence)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.features import FEATURE_NAMES
+from repro.costmodel import CostLedger, OpCost
+from repro.engine import (
+    AnalyticalBackend,
+    CostEngine,
+    CostEstimate,
+    CostQuery,
+    EnsembleBackend,
+    ForestBackend,
+    get_device,
+)
+from repro.engine.decompose import (
+    CNN_LATENCY_COLUMNS,
+    classwise_seconds,
+    cnn_energy_class_joules,
+    energy_terms,
+    latency_class_columns,
+    latency_terms,
+    ledger_latency_columns,
+    lm_roofline_terms,
+    price_ledger_energy,
+    watts_proxy,
+)
+from repro.engine.devices import (
+    DeviceSpec,
+    load_device_spec,
+    save_device_spec,
+)
+
+
+def _pow2_device():
+    """Every pricing multiplier an exact power of two (dyn = 16 W), so
+    per-record energies are dyadic rationals and grouped vs sequential
+    sums are EXACTLY equal — the bit-identical parity contract."""
+    return DeviceSpec(name="pow2", peak_flops=2.0**40, hbm_bw=2.0**33,
+                      ici_bw=2.0**30, idle_w=2.0, peak_w=18.0)
+
+
+def _ledger(n=64, seed=7):
+    rng = np.random.default_rng(seed)
+    classes = ("matmul", "elementwise", "collective", "data_movement")
+    return CostLedger([
+        OpCost(op=f"op{i}", op_class=classes[i % 4],
+               flops=float(rng.integers(1, 2**20)) * 2.0**10,
+               hbm_bytes=float(rng.integers(1, 2**20)) * 2.0**8,
+               collective_bytes=float(rng.integers(0, 2**10)) * 2.0**8)
+        for i in range(n)
+    ])
+
+
+# ---------------------------------------------------------------------------
+# ledger energy: per-op pricing + bit-identical class-sum parity
+# ---------------------------------------------------------------------------
+
+
+class TestLedgerEnergyParity:
+    def test_class_sums_resum_bit_identical(self):
+        dev = _pow2_device()
+        led = price_ledger_energy(_ledger(), dev)
+        sums = led.class_sums()
+        assert sum(s["energy_j"] for s in sums.values()) == led.energy_j
+        assert led.totals()["energy_j"] == led.energy_j
+        # per-record pricing is the exact three-term product
+        dyn = dev.dynamic_w
+        r = led.records[0]
+        assert r.energy_j == (r.flops * (dyn / dev.peak_flops)
+                              + r.hbm_bytes * (dyn / dev.hbm_bw)
+                              + r.collective_bytes * (dyn / dev.ici_bw))
+
+    def test_scaled_and_merge_preserve_energy(self):
+        led = price_ledger_energy(_ledger(), _pow2_device())
+        assert led.scaled(2.0).energy_j == 2.0 * led.energy_j
+        merged = CostLedger.merge_class_sums(
+            [led.class_sums(), led.class_sums()])
+        assert sum(s["energy_j"] for s in merged.values()) \
+            == 2.0 * led.energy_j
+
+    def test_npz_roundtrip_keeps_energy(self, tmp_path):
+        led = price_ledger_energy(_ledger(8), _pow2_device())
+        p = str(tmp_path / "led.npz")
+        led.save(p)
+        back = CostLedger.load(p)
+        assert [r.energy_j for r in back.records] \
+            == [r.energy_j for r in led.records]
+
+    def test_zero_watt_device_prices_zero(self):
+        led = price_ledger_energy(
+            _ledger(8), DeviceSpec(name="inert", peak_flops=1e12,
+                                   hbm_bw=1e11))
+        assert led.energy_j == 0.0
+
+
+# ---------------------------------------------------------------------------
+# envelope pricing: watts proxy + analytical energy terms
+# ---------------------------------------------------------------------------
+
+
+class TestEnvelope:
+    def test_watts_proxy_bounds_and_clamps(self):
+        dev = get_device("tx2_like")
+        # fully compute-bound: utilisation clamps at 1 → peak watts
+        assert float(watts_proxy(dev.peak_flops * 10.0, 1.0, dev)) \
+            == pytest.approx(dev.peak_w)
+        # no flops → idle draw; phi=0 (compile-only cell) → idle draw
+        assert float(watts_proxy(0.0, 1.0, dev)) == pytest.approx(dev.idle_w)
+        assert float(watts_proxy(1e9, 0.0, dev)) == pytest.approx(dev.idle_w)
+        mid = float(watts_proxy(dev.peak_flops * 0.5, 1.0, dev))
+        assert dev.idle_w < mid < dev.peak_w
+
+    def test_energy_terms_are_dyn_scaled_roofline(self):
+        dev = get_device("tx2_like")
+        static, comp, mem, coll = energy_terms(
+            1e12, 1e9, 0.5, dev, collective_bytes=1e6)
+        c_s, m_s, co_s = lm_roofline_terms(1e12, 1e9, 1e6, dev)
+        assert float(static) == pytest.approx(dev.idle_w * 0.5)
+        assert float(comp) == pytest.approx(dev.dynamic_w * float(c_s))
+        assert float(mem) == pytest.approx(dev.dynamic_w * float(m_s))
+        assert float(coll) == pytest.approx(dev.dynamic_w * float(co_s))
+
+    def test_cnn_energy_class_joules_resum_to_aggregate(self):
+        rng = np.random.default_rng(0)
+        f = rng.uniform(1e3, 1e6, size=len(FEATURE_NAMES))
+        dev = _pow2_device()
+        cls_j = cnn_energy_class_joules(f, 4, dev)
+        flops, bytes_moved = latency_terms(f, 4)
+        total = sum(float(np.atleast_1d(v)[0]) for v in cls_j.values())
+        agg = (float(np.atleast_1d(flops)[0]) * dev.dynamic_w
+               / dev.peak_flops
+               + float(np.atleast_1d(bytes_moved)[0]) * dev.dynamic_w
+               / dev.hbm_bw)
+        assert total == pytest.approx(agg, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# planted-coefficient recovery: CNN calibration path
+# ---------------------------------------------------------------------------
+
+
+def _cnn_dps(planted_energy, seed=0, n=10):
+    """Synthetic datapoints with measured energy built from a callable of
+    the class columns (the same decomposition the fit solves over)."""
+    from repro.core.dataset import Datapoint
+
+    rng = np.random.default_rng(seed)
+    dps = []
+    for i in range(n):
+        f = rng.uniform(1e3, 1e6, size=len(FEATURE_NAMES))
+        cols = latency_class_columns(f, 4)
+        dps.append(Datapoint(
+            family="synthetic", level=0.1 * i, strategy="random", bs=2,
+            width_mult=0.25, input_hw=16, seed=0,
+            gamma_mb=100.0, phi_ms=float(5.0 + 1e-9 * f.sum()),
+            energy_j=float(planted_energy(
+                {k: float(np.atleast_1d(v)[0]) for k, v in cols.items()})),
+            features=[float(v) for v in f]))
+    return dps
+
+
+class TestCnnEnergyFit:
+    def test_calibrate_recovers_planted_classwise_energy(self):
+        from repro.engine.calibrate import calibrate
+
+        e0, e_fl, e_ew, e_dm = 0.5, 2e-10, 6e-9, 4e-8
+        dps = _cnn_dps(lambda c: e0 + e_fl * c["flops_matmul"]
+                       + e_ew * c["hbm_elementwise"]
+                       + e_dm * c["hbm_data_movement"])
+        backend = AnalyticalBackend()
+        spec = calibrate(backend, None, [], datapoints=dps, apply=True)
+        assert spec.meta["energy_fit"] == "classwise"
+        assert spec.meta["energy_mape"] < 1e-6
+        # distinct byte costs: the tied aggregate genuinely cannot fit
+        assert spec.meta["energy_mape_aggregate"] > spec.meta["energy_mape"]
+        coeffs = spec.class_coeffs["cnn_energy"]
+        assert coeffs["_intercept"] == pytest.approx(e0, rel=1e-3)
+        assert coeffs["flops_matmul"] == pytest.approx(e_fl, rel=1e-3)
+        assert coeffs["hbm_elementwise"] == pytest.approx(e_ew, rel=1e-3)
+        assert coeffs["hbm_data_movement"] == pytest.approx(e_dm, rel=1e-3)
+
+    def test_backend_prices_fitted_energy_with_resumming_breakdown(self):
+        """The fitted spec's predictions: CostEstimate.energy_j equals the
+        planted formula and detail["energy_classes"] re-sums to the
+        aggregate minus the intercept — the column parity contract."""
+        from repro.core.pruning import pruned_model
+        from repro.engine.calibrate import calibrate
+
+        e0, e_fl, e_ew, e_dm = 0.5, 2e-10, 6e-9, 4e-8
+        dps = _cnn_dps(lambda c: e0 + e_fl * c["flops_matmul"]
+                       + e_ew * c["hbm_elementwise"]
+                       + e_dm * c["hbm_data_movement"])
+        backend = AnalyticalBackend()
+        calibrate(backend, None, [], datapoints=dps, apply=True)
+        spec = pruned_model("squeezenet", 0.3, "random", seed=0,
+                            width_mult=0.25, input_hw=16).conv_specs()
+        est = backend.estimate([CostQuery(spec=spec, bs=8,
+                                          stage="train")])[0]
+        assert est.detail["energy_fit"] == "fitted"
+        from repro.core.features import feature_matrix
+
+        cols = latency_class_columns(
+            feature_matrix([(spec, 8)])[0], backend.bytes_per_el)
+        expected = e0 + sum(
+            k * float(np.atleast_1d(cols[n])[0]) for k, n in
+            zip((e_fl, e_ew, e_dm), CNN_LATENCY_COLUMNS))
+        assert est.energy_j == pytest.approx(expected, rel=1e-3)
+        assert sum(est.detail["energy_classes"].values()) \
+            == pytest.approx(est.energy_j - e0, rel=1e-3)
+
+    def test_uncalibrated_backend_envelope_energy_resums(self):
+        """No fit anywhere: energy falls back to the power envelope, and
+        the per-class breakdown still re-sums to the dynamic aggregate."""
+        from repro.core.pruning import pruned_model
+
+        backend = AnalyticalBackend(device="tx2_like")
+        spec = pruned_model("squeezenet", 0.0, "random", seed=0,
+                            width_mult=0.25, input_hw=16).conv_specs()
+        est = backend.estimate([CostQuery(spec=spec, bs=4,
+                                          stage="train")])[0]
+        dev = backend.device
+        assert est.detail["energy_fit"] == "envelope"
+        assert est.energy_j > 0
+        static_j = dev.idle_w * est.phi_ms / 1e3
+        assert sum(est.detail["energy_classes"].values()) \
+            == pytest.approx(est.energy_j - static_j, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# planted-coefficient recovery: LM campaign path
+# ---------------------------------------------------------------------------
+
+
+def _lm_records(planted_phi, planted_energy, seed=1, n=12):
+    rng = np.random.default_rng(seed)
+    records = []
+    for _ in range(n):
+        fl = float(rng.uniform(1e6, 1e8))
+        ew = float(rng.uniform(1e5, 1e7))
+        dm = float(rng.uniform(1e4, 1e6))
+        classes = {
+            "matmul": {"flops": fl, "hbm_bytes": 0.0,
+                       "collective_bytes": 0.0, "count": 3},
+            "elementwise": {"flops": 0.0, "hbm_bytes": ew,
+                            "collective_bytes": 0.0, "count": 9},
+            "data_movement": {"flops": 0.0, "hbm_bytes": dm,
+                              "collective_bytes": 0.0, "count": 2},
+        }
+        records.append({
+            "status": "ok", "device": "host_cpu", "plan_hash": "x",
+            "flops": fl, "hbm_bytes": ew + dm, "collective_bytes": 0.0,
+            "cost_classes": classes,
+            "phi_ms": planted_phi(fl, ew, dm) * 1e3,
+            "energy_j": planted_energy(fl, ew, dm),
+        })
+    return records
+
+
+class TestLmEnergyFit:
+    def test_fit_hlo_constants_recovers_planted_classwise_energy(self):
+        from repro.campaign import fit_hlo_constants
+
+        e0, e_mm, e_ew, e_dm = 0.2, 3e-12, 5e-9, 6e-8
+        records = _lm_records(
+            lambda fl, ew, dm: 1e-3 + fl / 2e9 + (ew + dm) / 5e8,
+            lambda fl, ew, dm: e0 + e_mm * fl + e_ew * ew + e_dm * dm)
+        spec = fit_hlo_constants(records)
+        assert spec.meta["energy_fit"] == "classwise"
+        assert spec.meta["energy_mape"] < 1e-6
+        assert spec.meta["energy_mape_aggregate"] \
+            > spec.meta["energy_mape"]
+        coeffs = spec.class_coeffs["lm_energy"]
+        assert coeffs["_intercept"] == pytest.approx(e0, rel=1e-3)
+        assert coeffs["flops_matmul"] == pytest.approx(e_mm, rel=1e-3)
+        assert coeffs["hbm_elementwise"] == pytest.approx(e_ew, rel=1e-3)
+        assert coeffs["hbm_data_movement"] == pytest.approx(e_dm, rel=1e-3)
+
+    def test_aggregate_energy_fit_stored_as_tied_class_coeffs(self):
+        """Records without breakdowns: the aggregate energy NNLS recovers
+        the planted constants and is stored as TIED per-column
+        coefficients, so pricing stays one code path."""
+        from repro.campaign import fit_hlo_constants
+        from repro.engine.decompose import LM_LATENCY_COLUMNS
+
+        e0, e_f, e_b = 0.1, 4e-12, 2e-9
+        records = _lm_records(
+            lambda fl, ew, dm: 1e-3 + fl / 2e9 + (ew + dm) / 5e8,
+            lambda fl, ew, dm: e0 + e_f * fl + e_b * (ew + dm))
+        for r in records:
+            del r["cost_classes"]
+        spec = fit_hlo_constants(records)
+        assert spec.meta["energy_fit"] == "aggregate"
+        assert spec.meta["energy_mape"] < 1e-6
+        tied = spec.class_coeffs["lm_energy"]
+        assert tied["_intercept"] == pytest.approx(e0, rel=1e-3)
+        for col in LM_LATENCY_COLUMNS:
+            want = (e_f if col.startswith("flops_")
+                    else 0.0 if col == "collective" else e_b)
+            if want:
+                assert tied[col] == pytest.approx(want, rel=1e-3), col
+        # one pricing path: classwise_seconds over tied coefficients
+        # reproduces the aggregate formula on a fresh breakdown
+        sums = {"matmul": {"flops": 1e7, "hbm_bytes": 2e6,
+                           "collective_bytes": 0.0}}
+        priced = float(np.atleast_1d(classwise_seconds(
+            ledger_latency_columns([sums]), tied))[0])
+        assert priced == pytest.approx(tied["_intercept"] + e_f * 1e7
+                                       + e_b * 2e6, rel=1e-3)
+
+    def test_v2_records_skip_energy_fit(self):
+        from repro.campaign import fit_hlo_constants
+
+        records = _lm_records(
+            lambda fl, ew, dm: 1e-3 + fl / 2e9 + (ew + dm) / 5e8,
+            lambda fl, ew, dm: 0.0)   # schema-v2: no energy column
+        for r in records:
+            del r["energy_j"]
+        spec = fit_hlo_constants(records)
+        assert spec.meta["energy_fit"] == "none"
+        assert "lm_energy" not in spec.class_coeffs
+
+
+# ---------------------------------------------------------------------------
+# zero-compile chain: fitted forest energy → engine → admission
+# ---------------------------------------------------------------------------
+
+
+class _EnergyLMForest:
+    """Fitted-forest stand-in with an energy model; no jax anywhere."""
+
+    def __init__(self, gamma_mb=10.0, phi_ms=1.0, energy_j=3.5,
+                 energy_fitted=True):
+        self.fitted = True
+        self.energy_fitted = energy_fitted
+        self.meta = {}
+        self.gamma_mb, self.phi_ms, self.energy_j = gamma_mb, phi_ms, energy_j
+        self.default_device = get_device("host_cpu")
+
+    def content_hash(self):
+        return f"fake-energy-{self.energy_j}-{self.energy_fitted}"
+
+    def predict_queries(self, queries):
+        n = len(queries)
+        return np.full(n, self.gamma_mb), np.full(n, self.phi_ms)
+
+    def predict_energy(self, queries):
+        return np.full(len(queries), self.energy_j)
+
+
+def _q():
+    return CostQuery(arch="internlm2-1.8b", bs=2, seq=64, stage="infer",
+                     reduced=True)
+
+
+def test_energy_through_forest_chain_zero_compiles(monkeypatch):
+    import jax
+
+    def boom(*a, **k):
+        raise AssertionError("energy path invoked the jax compiler")
+
+    monkeypatch.setattr(jax, "jit", boom)
+    monkeypatch.setattr(AnalyticalBackend, "_compile_arch", boom)
+    engine = CostEngine(EnsembleBackend(
+        [ForestBackend(lm=_EnergyLMForest()), AnalyticalBackend()]))
+    est = engine.estimate_one(_q())
+    assert est.source == "forest" and est.energy_j == 3.5
+    ok, info = engine.admit(_q(), energy_budget_j=1.0, safety_margin=0.1)
+    assert not ok and info["energy_eff"] == pytest.approx(3.85)
+    ok, _ = engine.admit(_q(), energy_budget_j=10.0)
+    assert ok
+
+
+def test_pre_energy_forest_defaults_energy_zero():
+    engine = CostEngine(ForestBackend(
+        lm=_EnergyLMForest(energy_fitted=False)))
+    assert engine.estimate_one(_q()).energy_j == 0.0
+
+
+def test_cost_estimate_energy_roundtrip_tolerates_old_dicts():
+    est = CostEstimate(gamma_mb=1.0, phi_ms=2.0, energy_j=3.0, source="x")
+    assert CostEstimate.from_dict(est.to_dict()).energy_j == 3.0
+    d = est.to_dict()
+    del d["energy_j"]            # pre-energy estimate-cache entry
+    assert CostEstimate.from_dict(d).energy_j == 0.0
+
+
+def test_scheduler_energy_budget_refusal_with_breakdown():
+    """energy_budget_j admission: over-envelope compositions refuse with
+    the per-class energy breakdown on the refusal info, and dict-valued
+    cost_classes buckets don't crash the message formatter."""
+    from repro.serve import Decision, Request, SLOScheduler
+
+    class _EnergyEngine:
+        def estimate_one(self, query):
+            return CostEstimate(
+                gamma_mb=10.0, phi_ms=5.0, energy_j=40.0,
+                source="analytical",
+                detail={"cost_classes": {
+                            "matmul": {"flops": 1.0, "hbm_bytes": 2.0,
+                                       "collective_bytes": 0.0,
+                                       "energy_j": 30.0, "count": 3}},
+                        "energy_classes": {"matmul": 30.0,
+                                           "elementwise": 10.0}})
+
+    sched = SLOScheduler(
+        get_config("internlm2-1.8b", reduced=True), _EnergyEngine(),
+        max_len=64, n_slots=4, gamma_budget_mb=1e6, energy_budget_j=20.0)
+    req = Request(prompt=np.arange(1, 6, dtype=np.int32), max_new_tokens=4)
+    dec, info = sched.admit(req, n_running=0)
+    assert dec is Decision.REFUSE and "energy" in info["reason"]
+    assert info["energy_eff"] == pytest.approx(44.0)
+    err = sched.refusal(req, info)
+    assert err.info["energy_classes"]["matmul"] == 30.0
+    assert "matmul=" in str(err)   # dict buckets format, not TypeError
+    # generous envelope admits
+    ok = SLOScheduler(
+        get_config("internlm2-1.8b", reduced=True), _EnergyEngine(),
+        max_len=64, n_slots=4, gamma_budget_mb=1e6, energy_budget_j=100.0)
+    dec, info = ok.admit(req, n_running=0)
+    assert dec is Decision.ADMIT and info["energy_j"] == 40.0
+
+
+# ---------------------------------------------------------------------------
+# DeviceSpec power envelope: modes, fingerprint, persistence
+# ---------------------------------------------------------------------------
+
+
+class TestPowerEnvelope:
+    def test_with_power_mode_applies_and_refingerprints(self):
+        tx2 = get_device("tx2_like")
+        maxq = tx2.with_power_mode("MAXQ")
+        assert maxq.name == "tx2_like@MAXQ"
+        assert maxq.peak_w == 7.5
+        # a mode legitimately moves the roofline denominators too
+        assert maxq.peak_flops == pytest.approx(0.67e12)
+        assert maxq.fingerprint() != tx2.fingerprint()
+        assert maxq.dynamic_w == pytest.approx(7.5 - 1.4)
+        with pytest.raises(KeyError, match="MAXG"):
+            tx2.with_power_mode("MAXG")
+
+    def test_persistence_roundtrip_keeps_power_fields(self, tmp_path):
+        tx2 = get_device("tx2_like")
+        for ext in ("json", "npz"):
+            p = str(tmp_path / f"dev.{ext}")
+            save_device_spec(p, tx2)
+            back = load_device_spec(p)
+            assert back.idle_w == tx2.idle_w
+            assert back.peak_w == tx2.peak_w
+            assert back.power_modes == tx2.power_modes
+            assert back.fingerprint() == tx2.fingerprint(), ext
+
+    def test_envelope_validation(self):
+        with pytest.raises(ValueError, match="negative power"):
+            DeviceSpec(name="bad", peak_flops=1.0, hbm_bw=1.0, idle_w=-1.0)
+        with pytest.raises(ValueError, match="non-mode fields"):
+            DeviceSpec(name="bad", peak_flops=1.0, hbm_bw=1.0,
+                       power_modes={"X": {"hbm_bytes": 1.0}})

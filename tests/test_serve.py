@@ -379,6 +379,128 @@ def test_continuous_engine_refuses_via_scheduler(model):
 
 
 # ---------------------------------------------------------------------------
+# admission decision bugfixes (ISSUE 7): DEFER, TTFT, oversized prompts
+# ---------------------------------------------------------------------------
+
+
+class _BsFakeLMForest(_FakeLMForest):
+    """Batch-sensitive stand-in: Γ grows linearly with the priced bs, so
+    a composition can be over budget at bs=2 yet fit alone at bs=1."""
+
+    def content_hash(self):
+        return f"bsfake-{self.gamma_mb}-{self.phi_ms}"
+
+    def predict_queries(self, queries):
+        g = np.array([self.gamma_mb * q.bs for q in queries])
+        return g, np.full(len(queries), self.phi_ms)
+
+
+def _bs_scheduler(gamma_per_slot, budget_mb, **kw):
+    engine = CostEngine(ForestBackend(lm=_BsFakeLMForest(gamma_per_slot)))
+    return SLOScheduler(_cfg(), engine, max_len=64, n_slots=4,
+                        gamma_budget_mb=budget_mb, **kw)
+
+
+def test_scheduler_defers_occupancy_transient_misses():
+    """An over-budget composition that fits alone at bs=1 is DEFERred
+    (retry as slots drain), not refused for good; one that cannot fit
+    even alone is still REFUSE.  Pre-fix the DEFER branch was dead: the
+    scheduler returned only ADMIT/REFUSE."""
+    req = Request(prompt=np.arange(1, 9, dtype=np.int32), max_new_tokens=8)
+
+    # 60MB/slot, 100MB budget: bs=2 → 132MB eff (miss), bs=1 → 66MB (fits)
+    dec, info = _bs_scheduler(60.0, 100.0).admit(req, n_running=1)
+    assert dec is Decision.DEFER
+    assert "defer" in info and "bs=1" in info["defer"]
+    assert "budget" in info["reason"]           # the transient miss, kept
+
+    # same request with the slot free → straight ADMIT
+    dec, _ = _bs_scheduler(60.0, 100.0).admit(req, n_running=0)
+    assert dec is Decision.ADMIT
+
+    # 120MB/slot: over budget even alone → REFUSE, occupancy irrelevant
+    dec, info = _bs_scheduler(120.0, 100.0).admit(req, n_running=1)
+    assert dec is Decision.REFUSE and "defer" not in info
+
+
+def test_continuous_engine_defer_retries_and_finishes(model):
+    """End to end: the second arrival DEFERs while the first occupies its
+    slot, stays queued (not refused), and is admitted once the first
+    drains — both finish."""
+    cfg, params = model
+    engine = CostEngine(ForestBackend(lm=_BsFakeLMForest(60.0)))
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=2, eos_id=0, block_size=16,
+        gamma_budget_mb=100.0), cost_engine=engine)
+    a = Request(prompt=np.arange(1, 6, dtype=np.int32), max_new_tokens=2)
+    b = Request(prompt=np.arange(1, 6, dtype=np.int32), max_new_tokens=2)
+    ce.run([a, b])
+    assert ce.metrics()["refused"] == 0
+    assert ce.metrics()["finished"] == 2
+    assert a.state is RequestState.FINISHED
+    assert b.state is RequestState.FINISHED
+
+
+def test_scheduler_ttft_slo_refusal():
+    """ServeSLO.ttft_ms is actually enforced now: the request's own
+    prefill (priced at bs=1 over its prompt) over the target → REFUSE.
+    Pre-fix the field was stored but never read."""
+    from repro.serve import ServeSLO
+
+    req = Request(prompt=np.arange(1, 9, dtype=np.int32), max_new_tokens=8)
+    dec, info = _scheduler(10.0, 1e6, phi_ms=100.0,
+                           slo=ServeSLO(ttft_ms=50.0)).admit(
+        req, n_running=0)
+    assert dec is Decision.REFUSE and "TTFT" in info["reason"]
+    assert info["ttft_proxy_ms"] == pytest.approx(110.0)
+
+    dec, _ = _scheduler(10.0, 1e6, phi_ms=100.0,
+                        slo=ServeSLO(ttft_ms=200.0)).admit(req, n_running=0)
+    assert dec is Decision.ADMIT
+
+
+def test_ungated_engine_refuses_oversized_prompt(model):
+    """cost_engine=None: an oversized prompt must be REFUSED cleanly by
+    the engine's own context-window check.  Pre-fix this crashed in
+    ``_prefill_into`` (width − prompt_len goes negative)."""
+    cfg, params = model
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=32, n_slots=2, eos_id=0, block_size=16))
+    big = Request(prompt=np.arange(1, 41, dtype=np.int32), max_new_tokens=4)
+    ok = Request(prompt=np.arange(1, 6, dtype=np.int32), max_new_tokens=2)
+    ce.run([big, ok])
+    assert big.state is RequestState.REFUSED
+    assert isinstance(big.refusal, PlacementRefused)
+    assert "max_len" in str(big.refusal)
+    # the engine stays healthy: the normal request still completes
+    assert ok.state is RequestState.FINISHED
+    m = ce.metrics()
+    assert m["refused"] == 1 and m["finished"] == 1
+
+
+def test_gated_engine_refuses_oversized_prompt_before_scheduler(model):
+    """With a scheduler attached the window check fires in the engine
+    first — the cost model is never consulted for a request that cannot
+    fit regardless of price."""
+    cfg, params = model
+
+    class _CountingEngine:
+        calls = 0
+
+        def estimate_one(self, query):
+            type(self).calls += 1
+            return CostEstimate(gamma_mb=1.0, phi_ms=1.0, source="stub")
+
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=32, n_slots=2, eos_id=0, block_size=16,
+        gamma_budget_mb=1e6), cost_engine=_CountingEngine())
+    big = Request(prompt=np.arange(1, 41, dtype=np.int32), max_new_tokens=4)
+    ce.run([big])
+    assert big.state is RequestState.REFUSED
+    assert _CountingEngine.calls == 0
+
+
+# ---------------------------------------------------------------------------
 # per-request query helper
 # ---------------------------------------------------------------------------
 
