@@ -34,11 +34,13 @@ import time
 import numpy as np
 
 from repro.configs.registry import get_config
+from repro.engine import CostEngine, EnsembleBackend, ForestBackend, get_device
 from repro.kernels.autotune import KernelTuner
 from repro.models import transformer as T
 from repro.serve import (
     ContinuousConfig,
     ContinuousEngine,
+    FaultPlan,
     Request,
     ServeConfig,
     ServeEngine,
@@ -94,14 +96,16 @@ def run_lockstep(eng: ServeEngine, trace) -> dict:
     return {"wall_s": wall, "done": done}
 
 
-def run_continuous(ce: ContinuousEngine, trace) -> dict:
+def run_continuous(ce: ContinuousEngine, trace, *,
+                   deadline_ms: float | None = None) -> dict:
     start = time.perf_counter()
     i = 0
     while i < len(trace) or not ce.idle:
         now = time.perf_counter() - start
         while i < len(trace) and trace[i][0] <= now:
             arrival, prompt, max_new = trace[i]
-            req = Request(prompt=prompt, max_new_tokens=max_new)
+            req = Request(prompt=prompt, max_new_tokens=max_new,
+                          deadline_ms=deadline_ms)
             req.t_arrival = start + arrival
             ce.submit(req)
             i += 1
@@ -183,9 +187,150 @@ def run(print_fn=print, seed: int = 0) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# chaos row: the same trace under a seeded fault plan (docs/serve.md
+# "Failure semantics")
+# ---------------------------------------------------------------------------
+
+CHAOS_POOL_TOKENS = 96         # 6 usable blocks: real pool pressure
+CHAOS_FAULT_STEPS = 80         # fault window (engine drains past it)
+CHAOS_P_ALLOC = 0.25
+CHAOS_P_BACKEND = 0.25
+CHAOS_DEADLINE_MS = 60_000.0   # wired per request; never binds at bench scale
+
+
+class _StaticForest:
+    """Fitted-forest stand-in: keeps chaos admission zero-compile so the
+    row measures fault handling, not compiler wall time."""
+
+    fitted = True
+    meta: dict = {}
+
+    def __init__(self, tag):
+        self.tag = tag
+        self.default_device = get_device("host_cpu")
+
+    def content_hash(self):
+        return f"serve-bench-{self.tag}"
+
+    def predict_queries(self, queries):
+        n = len(queries)
+        return (np.full(n, 50.0), np.full(n, 1.0))
+
+
+def _chaos_engine(cfg, params, tuner, faults):
+    # Two model-backed failover levels (primary → fallback forest) ahead
+    # of the static floor, so injected backend crashes walk the whole
+    # health chain.
+    gate = CostEngine(EnsembleBackend([
+        ForestBackend(lm=_StaticForest("primary")),
+        ForestBackend(lm=_StaticForest("fallback")),
+    ]))
+    return ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=MAX_LEN, n_slots=N_SLOTS, eos_id=0, block_size=16,
+        pool_tokens=CHAOS_POOL_TOKENS, gamma_budget_mb=1e6),
+        cost_engine=gate, tuner=tuner, faults=faults)
+
+
+def _chaos_plan(seed):
+    return FaultPlan.seeded(seed + 1, n_steps=CHAOS_FAULT_STEPS,
+                            p_alloc=CHAOS_P_ALLOC, p_backend=CHAOS_P_BACKEND)
+
+
+def _reset(ce: ContinuousEngine) -> None:
+    """Clear per-pass accounting (jit memos, tuner and health state stay
+    warm) so the measured pass starts from a drained engine."""
+    ce.finished.clear()
+    ce.refused.clear()
+    ce.expired.clear()
+    ce.submitted = 0
+    ce.decode_steps = 0
+    ce._step = 0                # fault plans key on absolute step index
+    ce._skew_s = 0.0
+    for k in ce.counters:
+        ce.counters[k] = 0
+
+
+def _arm(ce: ContinuousEngine, plan) -> None:
+    """Point every injection site at a fresh plan for the measured pass."""
+    ce.faults = plan
+    ce.kv.faults = plan
+    if ce.failover is not None:
+        ce.failover.faults = plan
+
+
+def run_chaos(print_fn=print, seed: int = 0) -> dict:
+    """Serve the Poisson trace under a seeded fault plan and report the
+    robustness row: zero lost requests, all terminal, goodput retention
+    vs the identical fault-free cell."""
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    params = T.init_params(cfg, 0)
+    trace = make_trace(seed)
+    tuner = KernelTuner(cache=TUNING_CACHE)
+
+    def measure(ce, plan):
+        run_continuous(ce, trace, deadline_ms=CHAOS_DEADLINE_MS)  # warm jit
+        _reset(ce)
+        _arm(ce, plan)
+        wall = run_continuous(ce, trace,
+                              deadline_ms=CHAOS_DEADLINE_MS)["wall_s"]
+        tpots = [1e3 * (r.t_finished - r.t_arrival) / max(r.n_generated, 1)
+                 for r in ce.finished]
+        return ce.metrics(), _goodput(tpots, wall)
+
+    base_m, base_goodput = measure(
+        _chaos_engine(cfg, params, tuner, faults=None), None)
+    plan = _chaos_plan(seed)
+    chaos_ce = _chaos_engine(cfg, params, tuner, faults=_chaos_plan(seed))
+    chaos_m, chaos_goodput = measure(chaos_ce, plan)
+
+    terminal = (chaos_m["finished"] + chaos_m["refused"]
+                + chaos_m["expired"])
+    ratio = (chaos_goodput / base_goodput if base_goodput > 0
+             else float("inf"))
+    out = {
+        "n_requests": len(trace),
+        "chaos_finished": chaos_m["finished"],
+        "chaos_refused": chaos_m["refused"],
+        "chaos_expired": chaos_m["expired"],
+        "chaos_terminal": terminal,
+        "chaos_lost": chaos_m["lost"],
+        "faults_alloc_fired": chaos_m["faults"]["fired"]["alloc"],
+        "faults_backend_fired": chaos_m["faults"]["fired"]["backend"],
+        "preemptions": chaos_m["preemptions"],
+        "resumes": chaos_m["resumes"],
+        "failovers": chaos_m["health"]["failovers"],
+        "degraded_steps": chaos_m["degraded_steps"],
+        "goodput_faultfree": base_goodput,
+        "goodput_chaos": chaos_goodput,
+        "goodput_ratio": ratio,
+        "pool_conserved": (chaos_ce.kv.n_free_blocks
+                           == chaos_ce.kv.usable_blocks),
+        "baseline_lost": base_m["lost"],
+    }
+    print_fn(csv_line("serve/chaos_lost", out["chaos_lost"],
+                      f"terminal={terminal}/{len(trace)}"))
+    print_fn(csv_line(
+        "serve/chaos_faults_fired",
+        out["faults_alloc_fired"] + out["faults_backend_fired"],
+        f"alloc={out['faults_alloc_fired']} "
+        f"backend={out['faults_backend_fired']}"))
+    print_fn(csv_line(
+        "serve/chaos_preemptions", out["preemptions"],
+        f"resumes={out['resumes']} failovers={out['failovers']} "
+        f"degraded_steps={out['degraded_steps']}"))
+    print_fn(csv_line("serve/chaos_goodput_rps", chaos_goodput,
+                      f"faultfree={base_goodput:.2f} ratio={ratio:.2f}"))
+    return out
+
+
 if __name__ == "__main__":
     if os.path.exists(TUNING_CACHE):
         os.unlink(TUNING_CACHE)
     out = run()
     print(f"\ncontinuous vs lockstep speedup: {out['speedup']:.2f}x "
           f"(gate >= 1.0)")
+    chaos = run_chaos()
+    print(f"chaos: lost={chaos['chaos_lost']} "
+          f"terminal={chaos['chaos_terminal']}/{chaos['n_requests']} "
+          f"goodput ratio={chaos['goodput_ratio']:.2f} (gate >= 0.25)")

@@ -41,13 +41,19 @@ from repro.campaign.plan import (
     plan_grid,
     smoke_plan,
 )
-from repro.campaign.runner import CampaignLedger, CampaignRunner, measure_cell
+from repro.campaign.runner import (
+    CampaignLedger,
+    CampaignRunner,
+    CellTimeout,
+    measure_cell,
+)
 
 __all__ = [
     "CampaignCell",
     "CampaignLedger",
     "CampaignPlan",
     "CampaignRunner",
+    "CellTimeout",
     "CLASS_FEATURE_NAMES",
     "LMForest",
     "LM_FEATURE_NAMES",

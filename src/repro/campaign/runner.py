@@ -15,7 +15,10 @@ reuse forever" only works if "once" survives interruption):
   recorded as ``status:"failed"`` with the error and the campaign moves
   on.  Failed cells are NOT retried on restart (the failure is almost
   always deterministic — an unlowerable layout); ``retry_failed=True``
-  opts back in after a fix.
+  opts back in after a fix.  ``cell_timeout_s`` extends the same
+  policy to cells that *hang* instead of raising: the measurement is
+  fenced on a daemon thread and a blown budget quarantines the cell as
+  ``error:"timeout"``.
 * **Sharding** — ``shard_index/num_shards`` split cells by a stable hash
   of the cell key, so N workers given the same plan partition the grid
   without coordination and may share one ledger file (appends from
@@ -29,6 +32,7 @@ style — times real executions of the compiled step.
 
 from __future__ import annotations
 
+import threading
 import time
 import traceback
 from dataclasses import dataclass, field
@@ -38,7 +42,11 @@ import numpy as np
 from repro.campaign.plan import CampaignCell, CampaignPlan, mesh_dims
 from repro.core.fileio import append_jsonl, load_jsonl_tolerant
 
-__all__ = ["CampaignLedger", "CampaignRunner", "measure_cell"]
+__all__ = ["CampaignLedger", "CampaignRunner", "CellTimeout", "measure_cell"]
+
+
+class CellTimeout(RuntimeError):
+    """A cell's measurement exceeded the runner's ``cell_timeout_s``."""
 
 # v2: records carry ``cost_classes`` (the per-op-class ledger breakdown)
 # and ``device_fingerprint`` (checked at fit time — campaign/fit.py).
@@ -199,6 +207,7 @@ class CampaignRunner:
     warmup: int = 1
     run: bool = True
     retry_failed: bool = False
+    cell_timeout_s: "float | None" = None
     extra_meta: dict = field(default_factory=dict)
 
     def __post_init__(self):
@@ -207,6 +216,40 @@ class CampaignRunner:
         if self.measure is None:
             self.measure = lambda cell: measure_cell(
                 cell, repeats=self.repeats, warmup=self.warmup, run=self.run)
+
+    # -- timeout fence -----------------------------------------------------
+
+    def _measure_fenced(self, cell: CampaignCell) -> dict:
+        """``measure(cell)`` under the per-cell wall-clock budget.
+
+        A hung cell (an XLA compile that never returns, a wedged device)
+        would otherwise stall the whole campaign — the one failure mode
+        quarantine-on-exception can't catch.  The measurement runs on a
+        daemon thread; past ``cell_timeout_s`` the runner abandons it
+        (the thread can't be killed, but daemon threads don't block
+        process exit) and raises :class:`CellTimeout`, which the loop
+        quarantines like any other deterministic failure."""
+        if self.cell_timeout_s is None:
+            return self.measure(cell)
+        box: dict = {}
+
+        def work():
+            try:
+                box["result"] = self.measure(cell)
+            except BaseException as e:          # noqa: BLE001 — re-raised below
+                box["error"] = e
+
+        t = threading.Thread(target=work, daemon=True,
+                             name=f"cell-{cell.key[:8]}")
+        t.start()
+        t.join(self.cell_timeout_s)
+        if t.is_alive():
+            raise CellTimeout(
+                f"cell {cell.key[:8]} ({cell.arch} × {cell.shape.name}) "
+                f"exceeded {self.cell_timeout_s:.1f}s")
+        if "error" in box:
+            raise box["error"]
+        return box["result"]
 
     # -- work selection ----------------------------------------------------
 
@@ -258,16 +301,22 @@ class CampaignRunner:
                 **self.extra_meta,
             }
             try:
-                result = self.measure(cell)
+                result = self._measure_fenced(cell)
             except KeyboardInterrupt:
                 raise
             except Exception as e:
                 failed += 1
                 say(f"QUARANTINE {cell.arch} × {cell.shape.name} "
                     f"[{cell.mesh}]: {e}")
+                # Timeouts get a stable machine-readable error tag (the
+                # human detail lives in the trace) so downstream tooling
+                # can count hung cells apart from crashed ones.
+                err = ("timeout" if isinstance(e, CellTimeout)
+                       else f"{type(e).__name__}: {e}")
                 self.ledger.append({
-                    **base, "status": "failed", "error": f"{type(e).__name__}: {e}",
-                    "trace": traceback.format_exc(limit=5),
+                    **base, "status": "failed", "error": err,
+                    "trace": (str(e) if isinstance(e, CellTimeout)
+                              else traceback.format_exc(limit=5)),
                 })
                 continue
             measured += 1

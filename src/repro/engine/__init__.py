@@ -34,7 +34,7 @@ from repro.engine.devices import (
     resolve_device,
     save_device_spec,
 )
-from repro.engine.engine import CostEngine
+from repro.engine.engine import CostEngine, HealthState
 from repro.engine.types import (
     STAGE_INFER,
     STAGE_TRAIN,
@@ -57,6 +57,7 @@ __all__ = [
     "EnsembleBackend",
     "EstimateCache",
     "ForestBackend",
+    "HealthState",
     "ProfilerBackend",
     "STAGE_INFER",
     "STAGE_TRAIN",

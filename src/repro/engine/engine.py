@@ -16,7 +16,106 @@ from repro.engine.cache import EstimateCache
 from repro.engine.devices import resolve_device
 from repro.engine.types import CostBackend, CostEstimate, CostQuery
 
-__all__ = ["CostEngine"]
+__all__ = ["CostEngine", "HealthState"]
+
+
+class HealthState:
+    """Consecutive-failure state machine over a named failover chain.
+
+    The cost engine's backends are *predictors* — when one starts
+    throwing real exceptions (not the semantic
+    :class:`~repro.engine.types.BackendUnavailable`), the consumer
+    should stop asking it, not crash.  ``HealthState`` tracks which link
+    of a chain (e.g. ``["forest", "analytical", "static"]``) is
+    currently trusted:
+
+    * :meth:`record_failure` at the trusted level steps down one level
+      after ``fail_threshold`` *consecutive* failures (the last level —
+      conventionally a model-free ``"static"`` degraded mode — is the
+      floor: it cannot fail, so the chain never runs out of answers);
+    * :meth:`record_success` resets the consecutive counter, and — when
+      the success came from a *better* level than the trusted one (a
+      probe) — recovers the trusted level upward;
+    * :meth:`probe_level` schedules recovery: every ``probe_every``
+      calls while degraded, one call is routed through the next-better
+      level to test whether it healed.
+
+    The serve failover chain (``repro.serve.health.FailoverChain``)
+    drives this; :meth:`metrics` is what the engine surfaces per step so
+    benches and tests assert on failovers/recoveries instead of
+    log-scraping.
+    """
+
+    def __init__(self, levels: "list[str] | tuple[str, ...]", *,
+                 fail_threshold: int = 3, probe_every: int = 8):
+        if not levels:
+            raise ValueError("empty health chain")
+        self.levels = [str(x) for x in levels]
+        self.fail_threshold = max(1, int(fail_threshold))
+        self.probe_every = max(1, int(probe_every))
+        self.level = 0
+        self.consecutive = 0
+        self.calls = 0
+        self.failovers = 0
+        self.recoveries = 0
+        self.probes = 0
+        self.last_error: str | None = None
+
+    @property
+    def current(self) -> str:
+        return self.levels[self.level]
+
+    @property
+    def degraded(self) -> bool:
+        """At the chain floor (no model-backed level left)."""
+        return len(self.levels) > 1 and self.level == len(self.levels) - 1
+
+    def record_success(self, level: int | None = None) -> None:
+        if level is not None and level < self.level:
+            self.level = level           # successful probe: recover
+            self.recoveries += 1
+        if level is None or level <= self.level:
+            # A success at a *worse* level than the trusted one doesn't
+            # reset the count — the trusted level is still failing, and
+            # absolving it here would keep every call paying its crash.
+            self.consecutive = 0
+
+    def record_failure(self, err: "BaseException | str | None" = None) -> bool:
+        """Count one failure at the trusted level; returns True when it
+        tripped a step-down."""
+        if err is not None:
+            self.last_error = (f"{type(err).__name__}: {err}"
+                               if isinstance(err, BaseException) else str(err))
+        self.consecutive += 1
+        if (self.consecutive >= self.fail_threshold
+                and self.level < len(self.levels) - 1):
+            self.level += 1
+            self.consecutive = 0
+            self.failovers += 1
+            return True
+        return False
+
+    def probe_level(self) -> int | None:
+        """Level to try this call instead of the trusted one, or None.
+        Advances the call counter; while degraded below level 0, every
+        ``probe_every``-th call probes one level up."""
+        self.calls += 1
+        if self.level > 0 and self.calls % self.probe_every == 0:
+            self.probes += 1
+            return self.level - 1
+        return None
+
+    def metrics(self) -> dict:
+        return {
+            "level": self.level,
+            "current": self.current,
+            "degraded": self.degraded,
+            "failovers": self.failovers,
+            "recoveries": self.recoveries,
+            "probes": self.probes,
+            "consecutive_failures": self.consecutive,
+            "last_error": self.last_error,
+        }
 
 
 class CostEngine:

@@ -10,12 +10,20 @@ Two engines share the model stack and the admission gate:
   slots, and decode raggedly out of a :class:`PagedKVCache` block pool
   whose block size comes from the kernel autotuner's ``serve_kv`` tiling
   model.
+
+The fault-tolerance layer (docs/serve.md "Failure semantics") rides on
+the continuous engine: preemption under pool pressure, per-request
+deadlines + a watchdog, backend failover into static degraded mode
+(:class:`FailoverChain`), and a seeded deterministic fault-injection
+harness (:class:`FaultPlan`).
 """
 
 from repro.serve.continuous import ContinuousConfig, ContinuousEngine
 from repro.serve.engine import ServeConfig, ServeEngine, pad_ragged
+from repro.serve.faults import FAULT_KINDS, Fault, FaultInjected, FaultPlan
+from repro.serve.health import STATIC_LEVEL, FailoverChain
 from repro.serve.kv_cache import PagedKVCache, resolve_block_size
-from repro.serve.request import Request, RequestState
+from repro.serve.request import TERMINAL_STATES, Request, RequestState
 from repro.serve.scheduler import (
     Decision,
     PlacementRefused,
@@ -27,14 +35,21 @@ __all__ = [
     "ContinuousConfig",
     "ContinuousEngine",
     "Decision",
+    "FAULT_KINDS",
+    "Fault",
+    "FaultInjected",
+    "FaultPlan",
+    "FailoverChain",
     "PagedKVCache",
     "PlacementRefused",
     "Request",
     "RequestState",
     "SLOScheduler",
+    "STATIC_LEVEL",
     "ServeConfig",
     "ServeEngine",
     "ServeSLO",
+    "TERMINAL_STATES",
     "pad_ragged",
     "resolve_block_size",
 ]

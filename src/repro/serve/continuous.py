@@ -10,11 +10,36 @@ leave the running batch *every step*:
 * admitted requests prefill **individually** into a free slot (B=1 at a
   power-of-two bucketed length, left-padded) while other slots keep
   decoding — the prefill/decode split;
-* the KV lands in the block pool (:class:`PagedKVCache`), and one jitted
-  ragged decode advances *all* occupied slots with per-row
-  ``cache_len`` + block tables;
+* the KV lands in the block pool (:class:`PagedKVCache`) and grows
+  **incrementally**: admission allocates only the blocks the prefill
+  needs, and decode allocates one more each time a request's write
+  position crosses a block boundary;
 * EOS / token-budget completion frees the slot and its blocks
   immediately for the next arrival.
+
+Mispredicted load is a handled event, not a crash or a livelock
+(docs/serve.md "Failure semantics"):
+
+* **preemption** — when the pool cannot supply a growing request, the
+  youngest running request is evicted (blocks freed, generated tokens
+  retained) and re-queued at the head; it resumes by re-prefilling over
+  prompt + generated tokens through the ordinary bucketed prefill.  The
+  oldest running request is never chosen as a victim while younger ones
+  exist, and resumed requests hold the queue head — the oldest admitted
+  request always makes progress (anti-livelock);
+* **deadlines + watchdog** — ``Request.deadline_ms`` and the engine-wide
+  ``watchdog_ms`` TTL expire queued *and* running requests into the
+  typed terminal ``EXPIRED`` state; a bounded wait queue (``max_queue``)
+  refuses overflow at submit (backpressure); a DEFERred head retries
+  with exponential backoff instead of re-pricing every step;
+* **backend failover** — scheduler backend crashes step a
+  :class:`~repro.engine.engine.HealthState` down the chain
+  (forest → analytical → static degraded mode) via
+  :class:`~repro.serve.health.FailoverChain`;
+* a seeded :class:`~repro.serve.faults.FaultPlan` injects allocation
+  failures, backend exceptions, and slow steps deterministically, and
+  per-step robustness counters (``metrics()["preemptions"]``, …)
+  let tests and the chaos bench assert on all of the above.
 
 Shape stability: prefill retraces once per prompt-length bucket, decode
 once per power-of-two block-table width — a long-lived engine compiles
@@ -33,6 +58,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import transformer as T
+from repro.serve.health import FailoverChain
 from repro.serve.kv_cache import PagedKVCache
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import (
@@ -65,36 +91,68 @@ class ContinuousConfig:
     energy_budget_j: float | None = None   # per-step power/thermal envelope
     safety_margin: float = 0.1
     slo: ServeSLO = field(default_factory=ServeSLO)
+    # --- fault tolerance (docs/serve.md "Failure semantics") ---
+    max_queue: int | None = None      # bounded wait queue; None = unbounded
+    watchdog_ms: float | None = None  # engine-wide TTL; None = off
+    defer_backoff_cap: int = 8        # max steps between DEFER retries
+    degraded_slots: int | None = None  # static budget; None → n_slots // 2
+    health_fail_threshold: int = 3    # consecutive crashes per failover step
+    health_probe_every: int = 8       # estimate calls between recovery probes
 
 
 class ContinuousEngine:
     def __init__(self, cfg: ArchConfig, params,
                  scfg: ContinuousConfig | None = None, *,
-                 cost_engine=None, tuner=None):
+                 cost_engine=None, tuner=None, faults=None, clock=None):
         self.cfg = cfg
         self.scfg = scfg = scfg or ContinuousConfig()
         self.params = params
+        self.faults = faults
+        self._clock = clock or time.perf_counter
+        self._skew_s = 0.0                 # virtual stall from "slow" faults
         self.kv = PagedKVCache(
             cfg, n_slots=scfg.n_slots, max_len=scfg.max_len,
             block_size=scfg.block_size, pool_tokens=scfg.pool_tokens,
-            tuner=tuner)
+            tuner=tuner, faults=faults)
         self.scheduler = None
+        self.failover = None
         if cost_engine is not None:
+            self.failover = FailoverChain(
+                cost_engine, fail_threshold=scfg.health_fail_threshold,
+                probe_every=scfg.health_probe_every, faults=faults)
             self.scheduler = SLOScheduler(
                 cfg, cost_engine,
                 max_len=scfg.max_len, n_slots=scfg.n_slots,
                 gamma_budget_mb=scfg.gamma_budget_mb,
                 energy_budget_j=scfg.energy_budget_j,
-                safety_margin=scfg.safety_margin, slo=scfg.slo)
+                safety_margin=scfg.safety_margin, slo=scfg.slo,
+                failover=self.failover,
+                degraded_slots=scfg.degraded_slots)
 
         self.queue: deque[Request] = deque()
         self.slots: list[Request | None] = [None] * scfg.n_slots
         self.finished: list[Request] = []
         self.refused: list[Request] = []
+        self.expired: list[Request] = []
+        self.submitted = 0
+        self._admit_seq = 0
         self._cache_len = np.zeros(scfg.n_slots, np.int64)
         self._last_tok = np.zeros(scfg.n_slots, np.int32)
         self._step = 0
         self.decode_steps = 0
+        # Robustness counters — surfaced via metrics() so tests and the
+        # chaos bench assert on events instead of log-scraping.
+        self.counters = {
+            "preemptions": 0,        # running requests evicted for blocks
+            "resumes": 0,            # preempted requests re-admitted
+            "expired_queued": 0,     # deadline/watchdog sheds from the queue
+            "expired_running": 0,    # watchdog kills of running requests
+            "shed_backpressure": 0,  # bounded-queue refusals at submit
+            "defer_backoffs": 0,     # DEFER decisions (head now backs off)
+            "alloc_denied": 0,       # pool alloc failures (real or injected)
+            "failovers": 0,          # health step-downs (mirror of health)
+            "degraded_steps": 0,     # steps taken in static degraded mode
+        }
 
         self._key = jax.random.PRNGKey(scfg.seed)
         temp = float(scfg.temperature)
@@ -120,7 +178,31 @@ class ContinuousEngine:
     def idle(self) -> bool:
         return not self.queue and self.n_running == 0
 
+    def _now(self) -> float:
+        return self._clock() + self._skew_s
+
+    @property
+    def lost(self) -> int:
+        """Zero-lost accounting: submitted requests not in a terminal
+        state and no longer queued or running.  Must be 0 always."""
+        in_flight = len(self.queue) + self.n_running
+        terminal = len(self.finished) + len(self.refused) + len(self.expired)
+        return self.submitted - in_flight - terminal
+
     def submit(self, request: Request) -> Request:
+        self.submitted += 1
+        if (self.scfg.max_queue is not None
+                and len(self.queue) >= self.scfg.max_queue):
+            # Bounded wait queue: shed at the door with a typed refusal
+            # rather than queueing work that will only expire later.
+            request.state = RequestState.REFUSED
+            request.refusal = PlacementRefused(
+                f"request {request.rid} refused: wait queue full "
+                f"({self.scfg.max_queue} deep) — backpressure",
+                {"reason": "queue full", "max_queue": self.scfg.max_queue})
+            self.refused.append(request)
+            self.counters["shed_backpressure"] += 1
+            return request
         self.queue.append(request)
         return request
 
@@ -145,55 +227,142 @@ class ContinuousEngine:
         return fn
 
     # ------------------------------------------------------------------
+    # deadlines, TTL, shedding (requests leave without a crash)
+
+    def _deadline_reason(self, req: Request, now: float) -> str | None:
+        t_dl = req.t_deadline
+        if t_dl is not None and now > t_dl:
+            return f"deadline ({req.deadline_ms:.0f}ms TTL) passed"
+        wd = self.scfg.watchdog_ms
+        if wd is not None and now > req.t_arrival + wd / 1e3:
+            return f"watchdog ({wd:.0f}ms) expired stuck request"
+        return None
+
+    def _expire_request(self, req: Request, reason: str) -> None:
+        """Typed terminal EXPIRED state: blocks and slot are released, the
+        partial output (req.tokens) is retained for the caller."""
+        req.state = RequestState.EXPIRED
+        req.expiry = reason
+        req.t_finished = self._now()
+        if req.blocks:
+            self.kv.free(req.blocks)
+            req.blocks = []
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            self._cache_len[req.slot] = 0
+            self._last_tok[req.slot] = 0
+            req.slot = None
+        self.expired.append(req)
+
+    def _expire_sweep(self) -> None:
+        now = self._now()
+        if self.queue:
+            keep: deque[Request] = deque()
+            for req in self.queue:
+                reason = self._deadline_reason(req, now)
+                if reason is None:
+                    keep.append(req)
+                else:
+                    self._expire_request(req, reason)
+                    self.counters["expired_queued"] += 1
+            self.queue = keep
+        for req in list(self.slots):
+            if req is None:
+                continue
+            reason = self._deadline_reason(req, now)
+            if reason is not None:
+                self._expire_request(req, reason)
+                self.counters["expired_running"] += 1
+
+    # ------------------------------------------------------------------
     # admission + prefill (slots join)
+
+    def _refuse(self, req: Request, reason: str, info: dict | None = None,
+                *, pop: bool = True) -> None:
+        if pop:
+            self.queue.popleft()
+        req.state = RequestState.REFUSED
+        req.refusal = PlacementRefused(
+            f"request {req.rid} (prompt={req.prompt_len}, "
+            f"max_new={req.max_new_tokens}) refused: {reason}",
+            dict(info or {}, reason=reason))
+        self.refused.append(req)
 
     def _admissions(self) -> None:
         while self.queue and None in self.slots:
             req = self.queue[0]
-            # Context-window check in the engine itself, not only the
-            # scheduler: an ungated engine (cost_engine=None) must REFUSE
-            # an oversized prompt cleanly instead of crashing in
-            # ``_prefill_into`` (width - prompt_len goes negative).
-            need = req.prompt_len + req.max_new_tokens
-            if need > self.scfg.max_len:
-                self.queue.popleft()
-                req.state = RequestState.REFUSED
-                req.refusal = PlacementRefused(
-                    f"request {req.rid} (prompt={req.prompt_len}, "
-                    f"max_new={req.max_new_tokens}) refused: needs {need} "
-                    f"tokens > max_len={self.scfg.max_len}",
-                    {"reason": f"needs {need} tokens > "
-                               f"max_len={self.scfg.max_len}"})
-                self.refused.append(req)
-                continue
-            if self.scheduler is not None:
-                decision, info = self.scheduler.admit(
-                    req, n_running=self.n_running)
-                if decision is Decision.REFUSE:
-                    self.queue.popleft()
-                    req.state = RequestState.REFUSED
-                    req.refusal = self.scheduler.refusal(req, info)
-                    self.refused.append(req)
+            if req.retry_at_step > self._step:
+                break        # DEFER backoff: FIFO head holds the line
+            if req.state is not RequestState.PREEMPTED:
+                # Context-window check in the engine itself, not only the
+                # scheduler: an ungated engine (cost_engine=None) must
+                # REFUSE an oversized prompt cleanly instead of crashing
+                # in ``_prefill_into`` (width - prompt_len goes negative).
+                need = req.prompt_len + req.max_new_tokens
+                if need > self.scfg.max_len:
+                    self._refuse(req, f"needs {need} tokens > "
+                                      f"max_len={self.scfg.max_len}")
                     continue
-                if decision is Decision.DEFER:
-                    break
+                # Pool-capacity check: a request whose lifetime footprint
+                # exceeds the ENTIRE pool can never be packed — retrying
+                # it every step is a livelock, so REFUSE it now.
+                need_blocks = self.kv.blocks_for(min(need, self.scfg.max_len))
+                if need_blocks > self.kv.usable_blocks:
+                    self._refuse(
+                        req, f"pool capacity: needs {need_blocks} KV blocks "
+                             f"> pool of {self.kv.usable_blocks}",
+                        {"need_blocks": need_blocks,
+                         "pool_blocks": self.kv.usable_blocks})
+                    continue
+                if self.scheduler is not None:
+                    decision, info = self.scheduler.admit(
+                        req, n_running=self.n_running)
+                    if decision is Decision.REFUSE:
+                        self.queue.popleft()
+                        req.state = RequestState.REFUSED
+                        req.refusal = self.scheduler.refusal(req, info)
+                        self.refused.append(req)
+                        continue
+                    if decision is Decision.DEFER:
+                        # Exponential backoff: don't re-price the same
+                        # head every step while occupancy drains.
+                        req.defer_retries += 1
+                        req.retry_at_step = self._step + min(
+                            1 << (req.defer_retries - 1),
+                            self.scfg.defer_backoff_cap)
+                        self.counters["defer_backoffs"] += 1
+                        break
+            # Incremental allocation: only what the prefill itself needs
+            # (+ the first decode write) — the rest is allocated as the
+            # request grows, with preemption backstopping shortfalls.
+            total = req.prompt_len + req.n_generated
             blocks = self.kv.alloc(self.kv.blocks_for(
-                min(req.prompt_len + req.max_new_tokens, self.scfg.max_len)))
+                min(total + 1, self.scfg.max_len)))
             if blocks is None:
-                break                      # pool full: retry next step
+                self.counters["alloc_denied"] += 1
+                break                      # pool busy: retry next step
             self.queue.popleft()
             req.blocks = blocks
+            if req.state is RequestState.PREEMPTED:
+                self.counters["resumes"] += 1
             req.state = RequestState.ADMITTED
+            if req.admit_seq is None:      # age = FIRST admission order
+                req.admit_seq = self._admit_seq
+                self._admit_seq += 1
             self._prefill_into(req, self.slots.index(None))
 
     def _prefill_into(self, req: Request, slot: int) -> None:
-        S = req.prompt_len
+        # A resumed request re-prefills over prompt + generated tokens
+        # (recompute-on-resume): the logits at the last position then
+        # continue the decode exactly where preemption cut it.
+        seq = req.sequence()
+        S = len(seq)
         width = min(_next_pow2(max(S, self.kv.block_size)),
                     -(-self.scfg.max_len // self.kv.block_size)
                     * self.kv.block_size)
         pad = width - S
         tokens = np.zeros((1, width), np.int32)
-        tokens[0, pad:] = req.prompt
+        tokens[0, pad:] = seq
         out = self._prefill_fn(width)(self.params, {
             "tokens": jnp.asarray(tokens),
             "pos_offset": jnp.asarray([pad], jnp.int32),
@@ -203,7 +372,8 @@ class ContinuousEngine:
         req.state = RequestState.RUNNING
         req.slot = slot
         req.tokens.append(tok)
-        req.t_first_token = time.perf_counter()
+        if req.t_first_token is None:
+            req.t_first_token = self._now()
         self.kv.pack_prefill(out["cache"], req.blocks,
                              prompt_len=S, pad=pad)
         self.slots[slot] = req
@@ -212,9 +382,62 @@ class ContinuousEngine:
         self._retire_if_done(req)   # max_new_tokens=1 / instant EOS
 
     # ------------------------------------------------------------------
+    # preemption under pool pressure (slots leave involuntarily)
+
+    def _preempt(self, req: Request) -> None:
+        """Evict a running request: blocks back to the pool, generated
+        tokens retained, re-queued at the head (resume priority over new
+        arrivals — and over younger preemptees pushed earlier)."""
+        self.counters["preemptions"] += 1
+        req.preemptions += 1
+        if req.blocks:
+            self.kv.free(req.blocks)
+            req.blocks = []
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            self._cache_len[req.slot] = 0
+            self._last_tok[req.slot] = 0
+            req.slot = None
+        req.state = RequestState.PREEMPTED
+        self.queue.appendleft(req)
+
+    def _youngest_running(self) -> Request | None:
+        alive = [r for r in self.slots if r is not None]
+        if not alive:
+            return None
+        return max(alive, key=lambda r: r.admit_seq)
+
+    def _grow_blocks(self) -> None:
+        """Before decoding, make sure every occupied slot owns the block
+        its next KV write lands in.  A pool shortfall preempts the
+        youngest running request (possibly the grower itself) — never the
+        oldest while younger victims exist, so the oldest always
+        progresses."""
+        order = sorted(
+            (i for i, r in enumerate(self.slots) if r is not None),
+            key=lambda i: self.slots[i].admit_seq)
+        for i in order:
+            req = self.slots[i]
+            if req is None:
+                continue               # already taken as a victim
+            need_idx = int(self._cache_len[i]) // self.kv.block_size
+            while req.slot is not None and len(req.blocks) <= need_idx:
+                got = self.kv.alloc(1)
+                if got is not None:
+                    req.blocks.extend(got)
+                    continue
+                self.counters["alloc_denied"] += 1
+                victim = self._youngest_running()
+                if victim is None or victim is req:
+                    self._preempt(req)     # nobody younger: yield itself
+                    break
+                self._preempt(victim)      # then retry the alloc
+
+    # ------------------------------------------------------------------
     # decode (all occupied slots advance one token)
 
     def _decode_once(self) -> None:
+        self._grow_blocks()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return
@@ -235,7 +458,7 @@ class ContinuousEngine:
         self._key, sub = jax.random.split(self._key)
         toks = np.asarray(self._sample(logits, sub))
         self.decode_steps += 1
-        now = time.perf_counter()
+        now = self._now()
         for i in active:
             req = self.slots[i]
             tok = int(toks[i])
@@ -251,7 +474,7 @@ class ContinuousEngine:
         if not done:
             return
         req.state = RequestState.FINISHED
-        req.t_finished = now if now is not None else time.perf_counter()
+        req.t_finished = now if now is not None else self._now()
         self.kv.free(req.blocks)
         req.blocks = []
         if req.slot is not None:
@@ -263,11 +486,23 @@ class ContinuousEngine:
     # ------------------------------------------------------------------
 
     def step(self) -> None:
-        """One engine iteration: admit+prefill into free slots, then one
-        ragged decode step for every occupied slot."""
+        """One engine iteration: expire stale work, admit+prefill into
+        free slots, then one ragged decode step for every occupied slot.
+
+        Every failure the fault plan can inject here — pool-allocation
+        denial, backend exceptions, slow steps — is handled inside the
+        call: nothing escapes ``step`` short of a real model bug."""
         self._step += 1
+        if self.faults is not None:
+            self.faults.begin_step(self._step)
+            self._skew_s += float(self.faults.fire("slow"))
+        self._expire_sweep()
         self._admissions()
         self._decode_once()
+        if self.failover is not None:
+            self.counters["failovers"] = self.failover.health.failovers
+            if self.failover.degraded:
+                self.counters["degraded_steps"] += 1
 
     def run(self, requests: list[Request] | None = None, *,
             max_steps: int = 100_000) -> list[Request]:
@@ -289,9 +524,12 @@ class ContinuousEngine:
         def pct(xs, q):
             return float(np.percentile(xs, q)) if xs else float("nan")
 
-        return {
+        out = {
             "finished": len(self.finished),
             "refused": len(self.refused),
+            "expired": len(self.expired),
+            "submitted": self.submitted,
+            "lost": self.lost,
             "decode_steps": self.decode_steps,
             "tokens_out": sum(r.n_generated for r in self.finished),
             "ttft_p50_ms": pct(ttfts, 50) * 1e3,
@@ -301,4 +539,10 @@ class ContinuousEngine:
             "kv_bytes": self.kv.bytes,
             "kv_dense_bytes": self.kv.dense_bytes,
             "block_size": self.kv.block_size,
+            **self.counters,
         }
+        if self.failover is not None:
+            out["health"] = self.failover.metrics()
+        if self.faults is not None:
+            out["faults"] = self.faults.summary()
+        return out

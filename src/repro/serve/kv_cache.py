@@ -54,7 +54,7 @@ def resolve_block_size(cfg: ArchConfig, *, n_slots: int, max_len: int,
 class PagedKVCache:
     def __init__(self, cfg: ArchConfig, *, n_slots: int, max_len: int,
                  block_size: int | None = None, pool_tokens: int | None = None,
-                 tuner=None):
+                 tuner=None, faults=None):
         self.cfg = cfg
         self.n_slots = int(n_slots)
         self.max_len = int(max_len)
@@ -65,13 +65,20 @@ class PagedKVCache:
         if pool_tokens is None:
             # expected steady-state occupancy (the serve_kv cost model's
             # operating point) — half the dense footprint
-            pool_tokens = (self.n_slots * self.max_len) // 2
-        pool_tokens = max(int(pool_tokens), self.max_len)
+            pool_tokens = max((self.n_slots * self.max_len) // 2,
+                              self.max_len)
+        # An explicit pool_tokens is honoured as given (no silent
+        # inflation to max_len): requests whose lifetime footprint cannot
+        # fit the pool are the *engine's* job to REFUSE with a
+        # pool-capacity reason, not the pool's to paper over.
+        pool_tokens = max(int(pool_tokens), bs)
         self.n_blocks = 1 + -(-pool_tokens // bs)      # +1: scratch block 0
         self.blocks_per_seq = -(-self.max_len // bs)   # table width ceiling
         self.pool = T.init_paged_cache(cfg, self.n_blocks, bs)
         self._free = list(range(self.n_blocks - 1, 0, -1))
+        self._allocated: set[int] = set()
         self._pack_fns: dict[int, object] = {}
+        self.faults = faults               # FaultPlan: injected alloc failures
 
     # ------------------------------------------------------------------
     # host-side block accounting
@@ -80,20 +87,40 @@ class PagedKVCache:
     def n_free_blocks(self) -> int:
         return len(self._free)
 
+    @property
+    def usable_blocks(self) -> int:
+        """Total allocatable blocks (pool minus the reserved scratch) —
+        the hard ceiling on any single request's lifetime footprint."""
+        return self.n_blocks - 1
+
     def blocks_for(self, n_tokens: int) -> int:
         return -(-max(1, int(n_tokens)) // self.block_size)
 
     def alloc(self, n: int) -> list[int] | None:
         """n physical blocks, or None if the pool can't cover them now
-        (caller defers the request; nothing is allocated partially)."""
+        (caller defers, preempts, or refuses; nothing is allocated
+        partially).  An injected ``"alloc"`` fault denies the request
+        exactly as a genuinely empty free list would."""
+        if self.faults is not None and self.faults.fire("alloc"):
+            return None
         if n > len(self._free):
             return None
         taken = self._free[-n:]
         del self._free[-n:]
+        self._allocated.update(taken)
         return taken
 
     def free(self, blocks: list[int]) -> None:
+        """Return blocks to the pool.  Conservation is load-bearing under
+        preemption/expiry (the same block list can reach multiple exit
+        paths), so a double-free or foreign block is an error, not a
+        silent free-list corruption."""
         assert 0 not in blocks, "physical block 0 is reserved scratch"
+        bad = [b for b in blocks if b not in self._allocated]
+        if bad:
+            raise ValueError(f"free of unallocated block(s) {bad} "
+                             f"(double free or foreign block)")
+        self._allocated.difference_update(blocks)
         self._free.extend(blocks)
 
     @property

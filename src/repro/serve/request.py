@@ -6,6 +6,15 @@ places: it arrives (``QUEUED``), is admitted against the cost model
 leaves the batch on EOS / token budget (``FINISHED``) or is bounced by
 the scheduler (``REFUSED``).  Timing fields are wall-clock marks the
 bench turns into TTFT / per-token latency percentiles.
+
+Fault tolerance (docs/serve.md "Failure semantics") adds two states:
+
+* ``PREEMPTED`` — evicted from its slot under KV-pool pressure with
+  generated tokens retained; it re-queues at the head and resumes by
+  re-prefilling over prompt + generated tokens.  Not terminal.
+* ``EXPIRED`` — terminal: the deadline/watchdog shed it (``expiry``
+  says why).  Every admitted request ends FINISHED, REFUSED, or
+  EXPIRED — the engine's zero-lost accounting contract.
 """
 
 from __future__ import annotations
@@ -17,15 +26,22 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["Request", "RequestState"]
+__all__ = ["Request", "RequestState", "TERMINAL_STATES"]
 
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
     ADMITTED = "admitted"
     RUNNING = "running"
+    PREEMPTED = "preempted"
     FINISHED = "finished"
     REFUSED = "refused"
+    EXPIRED = "expired"
+
+
+#: States a request never leaves (the zero-lost accounting set).
+TERMINAL_STATES = frozenset(
+    {RequestState.FINISHED, RequestState.REFUSED, RequestState.EXPIRED})
 
 
 _ids = itertools.count()
@@ -36,6 +52,7 @@ class Request:
     prompt: np.ndarray                  # (S,) int32 token ids
     max_new_tokens: int = 32
     slo_ms: float | None = None         # per-token latency SLO (None = none)
+    deadline_ms: float | None = None    # end-to-end TTL from arrival (None = none)
     rid: int = field(default_factory=lambda: next(_ids))
     state: RequestState = RequestState.QUEUED
 
@@ -45,6 +62,11 @@ class Request:
     tokens: list[int] = field(default_factory=list)   # generated ids
     estimate: "object | None" = None                  # CostEstimate at admit
     refusal: "object | None" = None                   # PlacementRefused
+    expiry: str | None = None                         # why EXPIRED, if it did
+    admit_seq: int | None = None        # first-admission order (preempt age)
+    preemptions: int = 0                # times evicted under pool pressure
+    defer_retries: int = 0              # DEFER backoff attempts so far
+    retry_at_step: int = 0              # engine step before which not re-priced
 
     # wall-clock marks (seconds, time.perf_counter domain)
     t_arrival: float = field(default_factory=time.perf_counter)
@@ -61,6 +83,25 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    @property
+    def t_deadline(self) -> float | None:
+        """Absolute deadline (arrival clock domain), or None."""
+        if self.deadline_ms is None:
+            return None
+        return self.t_arrival + self.deadline_ms / 1e3
+
+    def sequence(self) -> np.ndarray:
+        """Prompt plus every generated token — what a preempted request
+        re-prefills over on resume (recompute-on-resume)."""
+        if not self.tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.tokens, np.int32)])
 
     @property
     def n_generated(self) -> int:

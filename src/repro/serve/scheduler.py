@@ -76,7 +76,9 @@ class SLOScheduler:
                  energy_budget_j: float | None = None,
                  safety_margin: float = 0.1,
                  slo: ServeSLO | None = None,
-                 seq_bucket: int = 64):
+                 seq_bucket: int = 64,
+                 failover=None,
+                 degraded_slots: int | None = None):
         self.cfg = cfg
         self.engine = cost_engine
         self.max_len = int(max_len)
@@ -84,6 +86,14 @@ class SLOScheduler:
         self.safety_margin = float(safety_margin)
         self.slo = slo or ServeSLO()
         self.seq_bucket = max(1, int(seq_bucket))
+        # Failover chain (serve/health.py): backend *crashes* are health
+        # events, not admission answers.  When every model-backed level
+        # is down the scheduler falls back to a conservative static slot
+        # budget — serve fewer, but keep serving.
+        self.failover = failover
+        self.degraded_slots = (max(1, int(degraded_slots))
+                               if degraded_slots is not None
+                               else max(1, self.n_slots // 2))
         # Registry convention: ArchConfig.reduced() appends "-smoke"; the
         # gate must predict the config actually being served.
         arch, reduced = cfg.name, False
@@ -98,6 +108,7 @@ class SLOScheduler:
         self.energy_budget_j = energy_budget_j
         self.device = device
         self.unavailable: str | None = None   # backend couldn't score us
+        self._last_miss: str | None = None    # why the last estimate was None
 
     # ------------------------------------------------------------------
 
@@ -109,10 +120,20 @@ class SLOScheduler:
                       -(-seq // self.seq_bucket) * self.seq_bucket))
         query = CostQuery(arch=self.arch, bs=max(1, bs), seq=seq,
                           stage="infer", reduced=self.reduced)
+        self._last_miss = None
         try:
+            if self.failover is not None:
+                # None here means "every model-backed level failed" —
+                # the degraded-mode signal, distinct from the semantic
+                # BackendUnavailable (which still raises through).
+                est = self.failover.estimate_one(query)
+                if est is None:
+                    self._last_miss = "degraded"
+                return est
             return self.engine.estimate_one(query)
         except BackendUnavailable as e:
             self.unavailable = str(e)
+            self._last_miss = "unavailable"
             return None
 
     def price(self, request) -> "object | None":
@@ -183,6 +204,22 @@ class SLOScheduler:
 
         est = self._estimate(n_running + 1, self.max_len)
         if est is None:
+            if self._last_miss == "degraded":
+                # Static-budget degraded mode: no model-backed level can
+                # price the batch, so admission falls back to a
+                # conservative fixed concurrency cap.  Over the cap is a
+                # DEFER (occupancy drains; the health probe may recover
+                # a real backend), never a REFUSE — degraded mode sheds
+                # throughput, not requests.
+                info = {"degraded": True,
+                        "health": self.failover.health.current,
+                        "static_slots": self.degraded_slots}
+                if n_running < self.degraded_slots:
+                    return Decision.ADMIT, info
+                info["reason"] = (
+                    f"degraded static budget: {n_running} running >= "
+                    f"{self.degraded_slots} static slots")
+                return Decision.DEFER, info
             # unknown arch / unscorable cell: serve ungated rather than
             # refusing workloads the model can't price (legacy behaviour)
             return Decision.ADMIT, {"skipped": self.unavailable}

@@ -209,6 +209,39 @@ class TestRunnerResume:
         assert r3.run_campaign()["measured"] == 1
         assert CampaignLedger(led).failed_keys == set()
 
+    def test_hung_cell_quarantined_as_timeout(self, tmp_path):
+        """A measurement that hangs (not raises) is fenced by the
+        per-cell wall-clock budget and quarantined as error:"timeout" —
+        the campaign moves on instead of stalling forever."""
+        import threading
+
+        plan = smoke_plan(subsample=4, seed=0)
+        led = str(tmp_path / "ledger.jsonl")
+        hung_key = plan.cells[1].key
+        release = threading.Event()
+
+        def hang(cell):
+            if cell.key == hung_key:
+                release.wait(30.0)      # "compile that never returns"
+            return fake_measure(cell)
+
+        runner = CampaignRunner(plan, led, measure=hang, cell_timeout_s=0.2)
+        out = runner.run_campaign()
+        release.set()                   # unstick the abandoned thread
+        assert out["measured"] == len(plan) - 1
+        assert out["failed"] == 1 and out["remaining"] == 0
+        rec = CampaignLedger(led).get(hung_key)
+        assert rec["status"] == "failed" and rec["error"] == "timeout"
+        # quarantine semantics hold: not retried on restart
+        r2 = CampaignRunner(plan, led, measure=fake_measure,
+                            cell_timeout_s=0.2)
+        assert r2.run_campaign()["measured"] == 0
+        # ...and a fast measurement under the same fence is untouched
+        r3 = CampaignRunner(plan, led, measure=fake_measure,
+                            cell_timeout_s=0.2, retry_failed=True)
+        assert r3.run_campaign()["measured"] == 1
+        assert CampaignLedger(led).failed_keys == set()
+
     def test_shards_partition_the_grid(self, tmp_path):
         plan = smoke_plan(seed=0)  # all 16 cells
         led = str(tmp_path / "ledger.jsonl")

@@ -1,0 +1,523 @@
+"""Fault-tolerance tests (ISSUE 8): seeded fault injection, preemption
+under pool pressure with recompute-on-resume, deadlines + watchdog,
+backend failover into static degraded mode, KV-pool conservation, and
+the pool-capacity admission-livelock regression."""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.engine import (
+    BackendUnavailable,
+    CostEngine,
+    CostEstimate,
+    CostQuery,
+    EnsembleBackend,
+    ForestBackend,
+    HealthState,
+    get_device,
+)
+from repro.models import transformer as T
+from repro.serve import (
+    ContinuousConfig,
+    ContinuousEngine,
+    Decision,
+    FailoverChain,
+    Fault,
+    FaultPlan,
+    PagedKVCache,
+    Request,
+    RequestState,
+    SLOScheduler,
+    TERMINAL_STATES,
+)
+
+
+def _cfg():
+    return get_config("internlm2-1.8b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg()
+    return cfg, T.init_params(cfg, 0)
+
+
+def _prompts(lens, seed=0, vocab=128):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, vocab, (n,)).astype(np.int32) for n in lens]
+
+
+def _assert_drained(ce):
+    """The engine-wide safety contract after a drain: every submitted
+    request is terminal, nothing leaked, every block is back in the
+    free list."""
+    assert ce.idle
+    assert ce.lost == 0
+    for r in ce.finished + ce.refused + ce.expired:
+        assert r.state in TERMINAL_STATES and not r.blocks
+    assert ce.kv.n_free_blocks == ce.kv.usable_blocks
+
+
+# ---------------------------------------------------------------------------
+# fault plan: deterministic, budgeted, accounted
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_seeded_deterministic():
+    kw = dict(n_steps=50, p_alloc=0.3, p_backend=0.2, p_slow=0.1)
+    a, b = FaultPlan.seeded(3, **kw), FaultPlan.seeded(3, **kw)
+    assert a.planned == b.planned
+    assert [(f.step, f.kind) for f in a.faults] == \
+           [(f.step, f.kind) for f in b.faults]
+    assert sum(a.planned.values()) > 0
+    c = FaultPlan.seeded(4, **kw)
+    assert [(f.step, f.kind) for f in a.faults] != \
+           [(f.step, f.kind) for f in c.faults]
+
+
+def test_fault_plan_budget_and_summary():
+    plan = FaultPlan([Fault(step=2, kind="alloc", count=2),
+                      Fault(step=2, kind="slow", delay_s=0.5),
+                      Fault(step=3, kind="backend")])
+    assert plan.fire("alloc") == 0          # before any begin_step
+    plan.begin_step(1)
+    assert plan.fire("alloc") == 0          # nothing planned at step 1
+    plan.begin_step(2)
+    assert plan.fire("alloc") == 1 and plan.fire("alloc") == 1
+    assert plan.fire("alloc") == 0          # count=2 budget consumed
+    assert plan.fire("slow") == 0.5 and plan.fire("slow") == 0
+    plan.begin_step(3)
+    assert plan.fire("backend") == 1 and plan.fire("backend") == 0
+    s = plan.summary()
+    assert s["planned"] == {"alloc": 2, "backend": 1, "slow": 1}
+    assert s["fired"] == {"alloc": 2, "backend": 1, "slow": 1}
+
+
+def test_fault_plan_rejects_bad_faults():
+    with pytest.raises(ValueError):
+        Fault(step=1, kind="meteor")
+    with pytest.raises(ValueError):
+        Fault(step=-1, kind="alloc")
+    with pytest.raises(ValueError):
+        FaultPlan().fire("meteor")
+
+
+# ---------------------------------------------------------------------------
+# health state machine + failover chain
+# ---------------------------------------------------------------------------
+
+
+def test_health_state_step_down_probe_recover():
+    h = HealthState(["forest", "analytical", "static"],
+                    fail_threshold=2, probe_every=4)
+    assert h.current == "forest" and not h.degraded
+    assert not h.record_failure("flake one")
+    assert h.record_failure("flake two")    # 2nd consecutive trips
+    assert h.current == "analytical" and h.failovers == 1
+    h.record_failure()
+    h.record_failure()
+    assert h.current == "static" and h.degraded
+    probes = [h.probe_level() for _ in range(8)]
+    assert probes.count(1) == 2             # every 4th call probes up
+    assert all(p in (None, 1) for p in probes)
+    h.record_success(1)                     # probe succeeded one up
+    assert h.current == "analytical" and h.recoveries == 1
+    assert h.metrics()["failovers"] == 2
+    assert "flake two" in h.metrics()["last_error"]
+
+
+def test_health_success_at_worse_level_does_not_absolve_trusted():
+    """A fallback answer must not reset the trusted level's failure
+    count, or a permanently-broken head level would never step down."""
+    h = HealthState(["a", "b"], fail_threshold=2)
+    h.record_failure()
+    h.record_success(level=1)               # deeper level answered
+    assert h.record_failure()               # still trips at 2 consecutive
+    assert h.current == "b"
+
+
+class _Flaky:
+    """Backend that crashes (a real exception, not BackendUnavailable)
+    until healed."""
+
+    name = "flaky"
+
+    def __init__(self, fail=True):
+        self.fail, self.calls = fail, 0
+
+    def supports(self, query):
+        return True
+
+    def cache_salt(self):
+        return "flaky"
+
+    def estimate(self, queries):
+        self.calls += 1
+        if self.fail:
+            raise RuntimeError("poisoned forest file")
+        return [CostEstimate(gamma_mb=1.0, phi_ms=1.0, source="flaky")
+                for _ in queries]
+
+
+class _Steady(_Flaky):
+    name = "steady"
+
+    def __init__(self):
+        super().__init__(fail=False)
+
+    def cache_salt(self):
+        return "steady"
+
+    def estimate(self, queries):
+        self.calls += 1
+        return [CostEstimate(gamma_mb=2.0, phi_ms=2.0, source="steady")
+                for _ in queries]
+
+
+def _query():
+    return CostQuery(arch="internlm2-1.8b", bs=1, seq=64, stage="infer",
+                     reduced=True)
+
+
+def test_failover_chain_steps_down_and_probe_recovers():
+    flaky, steady = _Flaky(), _Steady()
+    fc = FailoverChain(CostEngine(EnsembleBackend([flaky, steady])),
+                       fail_threshold=2, probe_every=3)
+    assert fc.health.levels == ["flaky", "steady", "static"]
+    # Crashes are absorbed: every call still answers, from the fallback.
+    for _ in range(2):
+        assert fc.estimate_one(_query()).source == "steady"
+    assert fc.health.current == "steady" and fc.health.failovers == 1
+    # Call 3 is the scheduled probe: the broken head is retried, fails,
+    # and the trusted level is unchanged (failed probes don't count).
+    assert fc.estimate_one(_query()).source == "steady"
+    assert fc.health.level == 1 and fc.health.probes == 1
+    # Off-probe calls don't consult the broken head at all.
+    flaky_calls = flaky.calls
+    fc.estimate_one(_query())
+    fc.estimate_one(_query())
+    assert flaky.calls == flaky_calls
+    # Once healed, the next probe recovers the trusted level.
+    flaky.fail = False
+    assert fc.estimate_one(_query()).source == "flaky"
+    assert fc.health.level == 0 and fc.health.recoveries == 1
+
+
+def test_failover_chain_exhausts_to_static_none():
+    fc = FailoverChain(CostEngine(EnsembleBackend([_Flaky(), _Flaky()])),
+                       fail_threshold=1, probe_every=100)
+    assert fc.estimate_one(_query()) is None    # static degraded signal
+    assert fc.degraded and fc.health.current == "static"
+    assert fc.metrics()["failovers"] == 2
+
+
+def test_failover_chain_backend_unavailable_passes_through():
+    class _Unavail:
+        name = "unavail"
+
+        def supports(self, query):
+            return True
+
+        def estimate(self, queries):
+            raise BackendUnavailable("cannot score this arch")
+
+    fc = FailoverChain(CostEngine(_Unavail()))
+    with pytest.raises(BackendUnavailable):
+        fc.estimate_one(_query())
+    # semantic misses are health-neutral
+    assert fc.health.level == 0 and fc.health.failovers == 0
+
+
+def test_scheduler_degraded_static_budget():
+    """With every model-backed level down, admission falls back to a
+    conservative static concurrency cap: ADMIT under it, DEFER over it
+    (never REFUSE — degraded mode sheds throughput, not requests)."""
+    eng = CostEngine(EnsembleBackend([_Flaky()]))
+    fc = FailoverChain(eng, fail_threshold=1, probe_every=1000)
+    sched = SLOScheduler(_cfg(), eng, max_len=64, n_slots=4,
+                         gamma_budget_mb=1e6, failover=fc, degraded_slots=2)
+    req = Request(prompt=np.arange(1, 9, dtype=np.int32), max_new_tokens=4)
+    dec, info = sched.admit(req, n_running=0)
+    assert dec is Decision.ADMIT and info["degraded"]
+    assert info["health"] == "static" and info["static_slots"] == 2
+    dec, info = sched.admit(req, n_running=2)
+    assert dec is Decision.DEFER and "static" in info["reason"]
+
+
+# ---------------------------------------------------------------------------
+# KV pool conservation (property test) + double-free guard
+# ---------------------------------------------------------------------------
+
+
+def test_kv_pool_conservation_property():
+    """free + allocated always sums to the pool, across a random walk of
+    alloc/free — including allocs denied by injected faults."""
+    plan = FaultPlan([Fault(step=1, kind="alloc", count=8)])
+    kv = PagedKVCache(_cfg(), n_slots=4, max_len=128, block_size=16,
+                      pool_tokens=256, faults=plan)
+    rng = np.random.default_rng(0)
+    held = []
+    for i in range(300):
+        if i == 150:
+            plan.begin_step(1)          # mid-walk: 8 denied allocs
+        if rng.random() < 0.55:
+            got = kv.alloc(int(rng.integers(1, 5)))
+            if got is not None:
+                held.append(got)
+        elif held:
+            kv.free(held.pop(int(rng.integers(0, len(held)))))
+        assert kv.n_free_blocks + len(kv._allocated) == kv.usable_blocks
+    assert plan.fired["alloc"] > 0
+    for blocks in held:
+        kv.free(blocks)
+    assert kv.n_free_blocks == kv.usable_blocks
+
+
+def test_kv_pool_double_free_raises():
+    kv = PagedKVCache(_cfg(), n_slots=2, max_len=64, block_size=16,
+                      pool_tokens=64)
+    a = kv.alloc(2)
+    kv.free(a)
+    with pytest.raises(ValueError, match="double free|unallocated"):
+        kv.free(a)
+    with pytest.raises(ValueError):
+        kv.free([kv.n_blocks + 7])      # foreign block id
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: a request larger than the whole pool must be
+# REFUSED, not retried forever (admission livelock)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_refuses_request_larger_than_pool(model):
+    cfg, params = model
+    # pool of 32 tokens = 2 usable blocks; prompt 40 + 8 new = 3 blocks.
+    # Pre-fix the pool silently inflated to max_len and the engine
+    # retried the head forever once pools could actually be small.
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=2, eos_id=0, block_size=16, pool_tokens=32))
+    assert ce.kv.usable_blocks == 2
+    big = Request(prompt=np.arange(1, 41, dtype=np.int32), max_new_tokens=8)
+    ok = Request(prompt=_prompts([5])[0], max_new_tokens=4)
+    ce.run([big, ok], max_steps=64)
+    assert big.state is RequestState.REFUSED
+    assert "pool" in str(big.refusal)
+    assert big.refusal.info["need_blocks"] == 3
+    assert ok.state is RequestState.FINISHED   # the queue kept moving
+    _assert_drained(ce)
+
+
+# ---------------------------------------------------------------------------
+# preemption: recompute-on-resume restores the exact greedy stream
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_resume_restores_greedy_stream(model):
+    """Two growers on a pool too small for both lifetimes: the youngest
+    is preempted mid-decode, resumes later, and must end with exactly
+    the tokens a solo uncontended run produces."""
+    cfg, params = model
+    prompts = _prompts([5, 5], seed=3)
+
+    def solo(p):
+        ce = ContinuousEngine(cfg, params, ContinuousConfig(
+            max_len=64, n_slots=1, eos_id=0, block_size=16))
+        req = Request(prompt=p, max_new_tokens=40)
+        ce.run([req])
+        return req.tokens
+
+    # 64-token pool = 4 usable blocks; each request's lifetime is 45
+    # tokens = 3 blocks, so both cannot finish without a preemption.
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=2, eos_id=0, block_size=16, pool_tokens=64))
+    reqs = [Request(prompt=p, max_new_tokens=40) for p in prompts]
+    ce.run(reqs)
+    assert ce.counters["preemptions"] >= 1
+    assert ce.counters["resumes"] >= 1
+    victim = max(reqs, key=lambda r: r.preemptions)
+    assert victim.preemptions >= 1
+    for req, p in zip(reqs, prompts):
+        assert req.state is RequestState.FINISHED
+        assert req.tokens == solo(p)
+    _assert_drained(ce)
+
+
+def test_preemption_victim_is_youngest_and_oldest_progresses(model):
+    """Anti-livelock: under sustained pressure the oldest admitted
+    request is never the victim while a younger one holds blocks."""
+    cfg, params = model
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=2, eos_id=0, block_size=16, pool_tokens=64))
+    old = Request(prompt=_prompts([5], seed=1)[0], max_new_tokens=40)
+    young = Request(prompt=_prompts([5], seed=2)[0], max_new_tokens=40)
+    ce.submit(old)
+    ce.step()                   # old admitted first → lower admit_seq
+    ce.submit(young)
+    ce.run()
+    assert old.preemptions == 0
+    assert young.preemptions >= 1
+    assert old.state is RequestState.FINISHED
+    assert young.state is RequestState.FINISHED
+    assert old.admit_seq < young.admit_seq
+    _assert_drained(ce)
+
+
+# ---------------------------------------------------------------------------
+# deadlines, watchdog, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_and_watchdog_expire_requests(model):
+    cfg, params = model
+    t = [0.0]
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=1, eos_id=0, block_size=16,
+        watchdog_ms=500.0), clock=lambda: t[0])
+    runner = Request(prompt=_prompts([5])[0], max_new_tokens=50)
+    waiter = Request(prompt=_prompts([6])[0], max_new_tokens=4,
+                     deadline_ms=100.0)
+    runner.t_arrival = waiter.t_arrival = 0.0   # enter the virtual clock
+    ce.submit(runner)
+    ce.submit(waiter)
+    for _ in range(3):
+        ce.step()               # runner occupies the only slot
+    assert runner.state is RequestState.RUNNING
+    assert waiter.state is RequestState.QUEUED
+    t[0] = 0.2                  # 200ms: past waiter's 100ms deadline
+    ce.step()
+    assert waiter.state is RequestState.EXPIRED
+    assert "deadline" in waiter.expiry
+    assert ce.counters["expired_queued"] == 1
+    t[0] = 0.6                  # 600ms: past the 500ms watchdog
+    ce.step()
+    assert runner.state is RequestState.EXPIRED
+    assert "watchdog" in runner.expiry
+    assert ce.counters["expired_running"] == 1
+    assert runner.n_generated > 0       # partial output retained
+    _assert_drained(ce)
+
+
+def test_slow_faults_skew_virtual_clock_into_deadline(model):
+    """A "slow" fault stalls the virtual clock — deadline paths fire
+    without real sleeps."""
+    cfg, params = model
+    t = [0.0]
+    plan = FaultPlan([Fault(step=2, kind="slow", delay_s=1.0)])
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=1, eos_id=0, block_size=16),
+        faults=plan, clock=lambda: t[0])
+    fast = Request(prompt=_prompts([5])[0], max_new_tokens=30,
+                   deadline_ms=500.0)
+    fast.t_arrival = 0.0
+    ce.submit(fast)
+    ce.step()                   # admitted + first decode
+    assert fast.state is RequestState.RUNNING
+    ce.step()                   # slow fault: clock jumps 1s > deadline
+    ce.step()
+    assert fast.state is RequestState.EXPIRED
+    assert plan.fired["slow"] == 1
+    _assert_drained(ce)
+
+
+def test_bounded_queue_sheds_at_submit(model):
+    cfg, params = model
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=1, eos_id=0, block_size=16, max_queue=2))
+    reqs = [Request(prompt=p, max_new_tokens=3)
+            for p in _prompts([4, 5, 6])]
+    for r in reqs:
+        ce.submit(r)
+    assert reqs[2].state is RequestState.REFUSED
+    assert "queue full" in str(reqs[2].refusal)
+    assert ce.counters["shed_backpressure"] == 1
+    ce.run()
+    assert reqs[0].state is RequestState.FINISHED
+    assert reqs[1].state is RequestState.FINISHED
+    _assert_drained(ce)
+
+
+# ---------------------------------------------------------------------------
+# chaos: seeded fault plan through the full gated engine
+# ---------------------------------------------------------------------------
+
+
+class _FakeLMForest:
+    fitted = True
+    meta: dict = {}
+
+    def __init__(self, gamma_mb=50.0, phi_ms=1.0):
+        self.gamma_mb, self.phi_ms = gamma_mb, phi_ms
+        self.default_device = get_device("host_cpu")
+
+    def content_hash(self):
+        return f"fake-{self.gamma_mb}-{self.phi_ms}"
+
+    def predict_queries(self, queries):
+        n = len(queries)
+        return (np.full(n, self.gamma_mb), np.full(n, self.phi_ms))
+
+
+def test_chaos_no_escape_no_loss(model):
+    """The headline contract: with faults injected at every layer, no
+    exception escapes step(), every request reaches a terminal state,
+    and the pool conserves."""
+    cfg, params = model
+    plan = FaultPlan(
+        [Fault(step=s, kind="alloc") for s in (1, 2, 4, 6, 8)]
+        + [Fault(step=s, kind="backend") for s in (1, 2, 3, 4, 5)]
+        + [Fault(step=3, kind="slow", delay_s=0.01)])
+    engine = CostEngine(ForestBackend(lm=_FakeLMForest()))
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=2, eos_id=0, block_size=16, pool_tokens=96,
+        gamma_budget_mb=1e6, health_fail_threshold=2),
+        cost_engine=engine, faults=plan)
+    reqs = [Request(prompt=p, max_new_tokens=m)
+            for p, m in zip(_prompts([4, 7, 3, 11, 6, 5], seed=5),
+                            (3, 10, 5, 2, 8, 4))]
+    ce.run(reqs)                # any escape fails the test here
+    assert all(r.state in TERMINAL_STATES for r in reqs)
+    m = ce.metrics()
+    assert m["lost"] == 0 and m["submitted"] == len(reqs)
+    assert m["alloc_denied"] > 0
+    assert m["faults"]["fired"]["alloc"] > 0
+    assert m["faults"]["fired"]["backend"] > 0
+    # repeated injected backend crashes stepped health down to static
+    assert m["health"]["failovers"] >= 1
+    _assert_drained(ce)
+
+
+def test_chaos_greedy_outputs_survive_faults(model):
+    """Faults may delay requests but never corrupt them: greedy tokens
+    under the fault plan equal the fault-free run's."""
+    cfg, params = model
+    prompts = _prompts([5, 9, 13], seed=7)
+
+    def run(faults):
+        ce = ContinuousEngine(cfg, params, ContinuousConfig(
+            max_len=64, n_slots=3, eos_id=0, block_size=16),
+            faults=faults)
+        reqs = [Request(prompt=p, max_new_tokens=8) for p in prompts]
+        ce.run(reqs)
+        assert all(r.state is RequestState.FINISHED for r in reqs)
+        _assert_drained(ce)
+        return [r.tokens for r in reqs]
+
+    clean = run(None)
+    faulted = run(FaultPlan.seeded(11, n_steps=12, p_alloc=0.5))
+    assert clean == faulted
+
+
+def test_metrics_surfaces_robustness_counters(model):
+    cfg, params = model
+    ce = ContinuousEngine(cfg, params, ContinuousConfig(
+        max_len=64, n_slots=1, eos_id=0, block_size=16))
+    ce.run([Request(prompt=_prompts([5])[0], max_new_tokens=3)])
+    m = ce.metrics()
+    for key in ("preemptions", "resumes", "expired_queued",
+                "expired_running", "shed_backpressure", "defer_backoffs",
+                "alloc_denied", "failovers", "degraded_steps",
+                "lost", "expired", "submitted"):
+        assert key in m, key
+    assert m["lost"] == 0 and m["preemptions"] == 0
