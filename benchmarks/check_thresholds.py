@@ -51,6 +51,8 @@ PARITY_TOL = 1e-9   # packed-forest float accumulation order (≈1e-14 observed)
 # at smoke scale).
 LEDGER_PARITY_RTOL = 1e-9
 CAMPAIGN_GAMMA_MAPE_MAX = 0.50  # sanity bound on the LM forest's memory error
+PLANNER_WALL_S_MAX = 1.0        # price the whole layout space, zero compiles
+COLLECTIVE_CELLS_MIN = 2        # >1-device smoke cells the NNLS must see
 SERVE_SPEEDUP_MIN = 1.0         # continuous must never lose to lockstep
 # Under the seeded chaos plan the engine must keep a usable fraction of
 # its fault-free goodput (lax: CI wall-clock noise dominates the rest).
@@ -140,6 +142,40 @@ def main() -> int:
                   f"{camp['hlo_energy_mape_aggregate']:.3f}")
     else:
         print("SKIP campaign accuracy (smoke grid too sparse)")
+
+    # Auto-sharding planner (docs/planner.md, ISSUE 9 acceptance): the
+    # chosen layout's predicted step cost is never worse than the
+    # hard-coded production mesh (1x16x16 — which is itself a candidate,
+    # so any violation means the ranking broke), the FULL layout space is
+    # priced well under a second, and the booby-trapped compiler counted
+    # zero invocations while it happened.
+    pl = engine_bench.planner_bench()
+    check(pl["compiles"] == 0,
+          f"planner priced {pl['layouts']} layouts with zero compiles "
+          f"(counted {pl['compiles']})")
+    check(pl["chosen_phi_ms"] <= pl["default_phi_ms"] * (1 + 1e-9),
+          f"planner chosen {pl['chosen']} phi {pl['chosen_phi_ms']:.2f}ms <= "
+          f"default 1x16x16 phi {pl['default_phi_ms']:.2f}ms "
+          f"(speedup {pl['speedup']:.2f}x)")
+    check(pl["wall_s"] < PLANNER_WALL_S_MAX,
+          f"planner pricing wall {pl['wall_s'] * 1e3:.1f}ms < "
+          f"{PLANNER_WALL_S_MAX * 1e3:.0f}ms")
+
+    # Collective calibration (the >1-device smoke grid): after the fit,
+    # the collective column must have entered the class-wise system on
+    # real multi-device measurements — the coefficient the planner's
+    # collective_seconds() prices layouts with.
+    coll = engine_bench.collective_calibration()
+    if coll:
+        check(coll["collective_cells"] >= COLLECTIVE_CELLS_MIN,
+              f"collective calibration saw {coll['collective_cells']} "
+              f">1-device cells >= {COLLECTIVE_CELLS_MIN}")
+        check(bool(coll["collective_column_fitted"]),
+              f"collective coeffs present after smoke fit "
+              f"(coeff={coll['collective_coeff']:.3g} s/B, "
+              f"n={coll['n_records']} records)")
+    else:
+        print("SKIP collective calibration (subprocess or fit unavailable)")
 
     # Serving: continuous batching vs lockstep on the seeded open-loop
     # trace (ISSUE 6 acceptance) — never worse on sustained req/s or

@@ -408,6 +408,158 @@ def campaign_accuracy(print_fn=print, *, ledger_path: str | None = None,
     return out
 
 
+def planner_bench(print_fn=print, *, n_devices: int = 256) -> dict:
+    """Auto-sharding planner rows (docs/planner.md): size of the layout
+    space, wall-clock to price ALL of it through the engine, predicted
+    speedup of the chosen layout over the hard-coded production mesh
+    (1x16x16) — with the jax compiler booby-trapped for the whole run, so
+    the zero-compile guarantee is measured, not assumed.
+
+    The base query is answered by a planted forest (known Γ/Φ), making the
+    rows deterministic and engine-path-realistic: the planner sees exactly
+    what a campaign-fitted deployment would hand it."""
+    from repro.engine import EnsembleBackend, get_device
+    from repro.engine.backends import AnalyticalBackend as _AB
+    from repro.planner import LayoutPlanner
+
+    class _PlantedLMForest:
+        """Fitted-forest stand-in: constant (Γ, Φ), no jax anywhere."""
+
+        fitted = True
+        meta: dict = {}
+
+        def __init__(self, gamma_mb, phi_ms):
+            self.gamma_mb, self.phi_ms = gamma_mb, phi_ms
+            self.default_device = get_device("tpu_v5e")
+
+        def content_hash(self):
+            return f"planted-{self.gamma_mb}-{self.phi_ms}"
+
+        def predict_queries(self, queries):
+            n = len(queries)
+            return (np.full(n, self.gamma_mb), np.full(n, self.phi_ms))
+
+    compiles = {"n": 0}
+    orig = _AB._compile_arch
+
+    def boom(*a, **k):
+        compiles["n"] += 1
+        raise AssertionError("planner pricing invoked the jax compiler")
+
+    _AB._compile_arch = boom
+    try:
+        engine = CostEngine(
+            EnsembleBackend([
+                ForestBackend(lm=_PlantedLMForest(40_000.0, 1000.0)),
+                AnalyticalBackend(),
+            ]),
+            device=get_device("tpu_v5e"))
+        planner = LayoutPlanner(engine)
+        t0 = time.perf_counter()
+        plan = planner.plan("qwen3-4b", "train_4k", n_devices, n_micro=8)
+        wall_s = time.perf_counter() - t0
+    finally:
+        _AB._compile_arch = orig
+
+    chosen = plan.chosen
+    default = plan.decision_for("1x16x16") if n_devices == 256 else None
+    speedup = (default.phi_ms / chosen.phi_ms
+               if (chosen and default) else float("nan"))
+    print_fn(csv_line("planner/layouts_enumerated", plan.meta["n_layouts"],
+                      f"devices={n_devices} ranked={plan.meta['n_ranked']} "
+                      f"refused={plan.meta['n_refused']}"))
+    print_fn(csv_line("planner/pricing_wall_ms", wall_s * 1e3,
+                      f"target<1000 compiles={compiles['n']}"))
+    if chosen and default:
+        print_fn(csv_line("planner/chosen_vs_default_speedup", speedup,
+                          f"chosen={chosen.layout.descriptor} "
+                          f"phi={chosen.phi_ms:.2f}ms vs 1x16x16 "
+                          f"{default.phi_ms:.2f}ms"))
+    return {
+        "layouts": plan.meta["n_layouts"],
+        "wall_s": wall_s,
+        "compiles": compiles["n"],
+        "chosen": chosen.layout.descriptor if chosen else None,
+        "chosen_phi_ms": chosen.phi_ms if chosen else float("inf"),
+        "default_phi_ms": default.phi_ms if default else float("nan"),
+        "speedup": speedup,
+    }
+
+
+def collective_calibration(print_fn=print, *, ledger_path: str | None = None
+                           ) -> dict:
+    """Collective-coefficient rows: run the >1-device calibration grid
+    (``campaign.plan.collective_smoke_plan`` — the same cells on 1x1,
+    2x1 and 1x2 meshes) in a subprocess with a forced 2-device host, then
+    fit the HLO constants over the ledger and report whether the
+    collective column entered the fit on real measurements.
+
+    Subprocess because ``xla_force_host_platform_device_count`` must be
+    set before jax initializes — this process has already done so.  The
+    /tmp ledger persists, so after the first nightly run this is
+    resume + fit.  Skips (empty dict) instead of failing when the
+    subprocess or the fit can't run — same degraded contract as
+    ``campaign_accuracy``."""
+    import json
+    import subprocess
+    import sys
+    import textwrap
+
+    ledger_path = ledger_path or "/tmp/perf4sight_campaign_collective.jsonl"
+    script = textwrap.dedent(f"""
+        from repro.campaign import CampaignRunner
+        from repro.campaign.plan import collective_smoke_plan
+        plan = collective_smoke_plan()
+        runner = CampaignRunner(plan, {ledger_path!r}, repeats=2, warmup=1)
+        out = runner.run_campaign()
+        print("CELLS", out["measured"], out["failed"], out["remaining"])
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src")]
+                   + os.environ.get("PYTHONPATH", "").split(os.pathsep)))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        print_fn(csv_line("campaign/collective_skipped", 1.0,
+                          f"measure subprocess failed: "
+                          f"{proc.stderr.strip().splitlines()[-1:] or '?'}"))
+        return {}
+
+    from repro.campaign import CampaignLedger, fit_hlo_constants
+    from repro.campaign.plan import collective_smoke_plan
+
+    plan_keys = {c.key for c in collective_smoke_plan().cells}
+    records = [r for r in CampaignLedger(ledger_path).records("ok")
+               if r.get("key") in plan_keys]
+    try:
+        spec = fit_hlo_constants(records)
+    except ValueError as e:
+        print_fn(csv_line("campaign/collective_skipped", 1.0,
+                          f"fit refused: {e}"))
+        return {}
+    meta = spec.meta
+    coeff = (meta["collective_coeff_classwise"]
+             if meta["collective_coeff_classwise"] is not None
+             else meta["collective_coeff_aggregate"])
+    print_fn(csv_line("campaign/collective_cells", meta["collective_cells"],
+                      f"of {len(records)} fitted (meshes 1x1/2x1/1x2)"))
+    print_fn(csv_line("campaign/collective_column_fitted",
+                      float(meta["collective_column_fitted"]),
+                      f"classwise_columns={len(meta['classwise_columns'])}"))
+    print_fn(csv_line("campaign/collective_coeff_s_per_byte", coeff,
+                      json.dumps({"aggregate":
+                                  meta["collective_coeff_aggregate"]})))
+    return {
+        "collective_cells": meta["collective_cells"],
+        "collective_column_fitted": meta["collective_column_fitted"],
+        "collective_coeff": coeff,
+        "collective_coeff_aggregate": meta["collective_coeff_aggregate"],
+        "n_records": len(records),
+    }
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()
@@ -416,5 +568,6 @@ def _timed(fn) -> float:
 
 if __name__ == "__main__":
     out = run()
+    planner_bench()
     print(f"\nbatched speedup: {out['speedup']:.1f}x "
           f"(target >=5x on {POPULATION} candidates)")

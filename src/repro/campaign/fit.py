@@ -410,6 +410,7 @@ def fit_hlo_constants(
     # happened to carry one.
     class_coeffs: dict = {}
     phi_mape_cls = None
+    names: list = []
     if per_class and all(r.get("cost_classes") for r in recs):
         cols = ledger_latency_columns([r["cost_classes"] for r in recs])
         names = [n for n, v in cols.items() if np.any(v)]
@@ -495,6 +496,19 @@ def fit_hlo_constants(
             "latency_fit": ("classwise" if "lm_latency" in class_coeffs
                             else "aggregate"),
             "fit": "campaign_hlo_nnls",
+            # Collective-calibration audit trail (the >1-device smoke
+            # grid — campaign/plan.collective_smoke_plan — exists to make
+            # these meaningful): how many fitted cells actually moved
+            # collective bytes, whether the collective column entered the
+            # class-wise system, and both fitted prices.  The planner's
+            # collective_seconds() uses the class-wise coefficient when
+            # present, so benchmarks gate on these fields.
+            "collective_cells": int(np.sum(coll > 0)),
+            "collective_column_fitted": bool("collective" in names),
+            "collective_coeff_aggregate": float(c[3]),
+            "collective_coeff_classwise": (
+                class_coeffs.get("lm_latency", {}).get("collective")),
+            "classwise_columns": list(names),
             **energy_meta,
         },
     )

@@ -32,6 +32,7 @@ __all__ = [
     "resolve_shape",
     "plan_grid",
     "smoke_plan",
+    "collective_smoke_plan",
     "load_plan",
 ]
 
@@ -228,3 +229,27 @@ def smoke_plan(
     return plan_grid(archs=archs, shapes=shapes, meshes=("1x1",),
                      device=device, reduced=True, subsample=subsample,
                      seed=seed)
+
+
+def collective_smoke_plan(
+    archs: tuple[str, ...] = ("stablelm-1.6b",),
+    shapes: tuple[str, ...] = ("smoke_train_16x2", "smoke_train_32x2"),
+    *,
+    device: str = "host_cpu",
+    seed: int = 0,
+) -> CampaignPlan:
+    """The >1-device calibration grid: the same cells on ``1x1`` AND on the
+    two minimal multi-device meshes (``2x1`` data-parallel, ``1x2``
+    tensor-parallel), so the collective column of the class-wise NNLS
+    (``fit.fit_hlo_constants``) spans nonzero values and the collective
+    coefficient is fit on real measurements instead of staying at the
+    ici_bw guess.  Run it under a forced host device count::
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=2
+
+    (``benchmarks/engine_bench.collective_calibration`` does exactly
+    this in a subprocess; the fit then requires ``allow_mixed`` off —
+    same host, same device constants, just two fake devices)."""
+    return plan_grid(archs=archs, shapes=shapes,
+                     meshes=("1x1", "2x1", "1x2"),
+                     device=device, reduced=True, seed=seed)

@@ -54,7 +54,12 @@ class CellTimeout(RuntimeError):
 # envelope's modelled draw at the measured phi) and the ``cost_classes``
 # buckets gain a per-class dynamic ``energy_j``.  Loads are tolerant:
 # v2 records simply lack the columns and the energy fits skip them.
-LEDGER_SCHEMA_VERSION = 3
+# v4: records carry the planner's ``layout`` block (per-class collective
+# bytes + memory split predicted by the sharding rules for this cell's
+# mesh — distributed/collectives.layout_collectives), so fitted
+# collective coefficients can be audited against the byte model that
+# will consume them.
+LEDGER_SCHEMA_VERSION = 4
 
 
 class CampaignLedger:
@@ -168,6 +173,17 @@ def measure_cell(
 
     dev = resolve_device(cell.device)
     watts = float(watts_proxy(cost.flops, phi_ms / 1e3, dev)) if run else 0.0
+
+    # Planner accounting for this cell: the per-class collective bytes and
+    # memory split the sharding rules *predict* for this layout, logged
+    # next to the measured HLO counts so the fitted collective coefficient
+    # and the planner's byte model can be compared cell-by-cell (the
+    # planner's decisions feed back into the fit via this block).  A real
+    # jax Mesh satisfies the abstract-mesh protocol (axis_names +
+    # devices.shape are all that's read).
+    from repro.distributed.collectives import layout_collectives
+
+    layout = layout_collectives(cfg, cell.shape, mesh).to_dict()
     return {
         "gamma_mb": (mb["arg"] + mb["out"] + mb["temp"] + mb["code"]) / 1e6,
         "phi_ms": phi_ms,
@@ -183,6 +199,7 @@ def measure_cell(
         # of the device constants this cell was measured under, checked at
         # fit time against the spec that will featurize it.
         "cost_classes": price_ledger_energy(cost.ledger, dev).class_sums(),
+        "layout": layout,
         "device_fingerprint": dev.fingerprint(),
         "temp_mb": mb["temp"] / 1e6,
         "arg_mb": mb["arg"] / 1e6,

@@ -16,6 +16,7 @@ rather than producing an invalid spec (recorded by ``describe_sharding``).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from types import SimpleNamespace
 
 import jax
 import numpy as np
@@ -31,6 +32,8 @@ __all__ = [
     "state_pspecs",
     "to_named",
     "fsdp_wanted",
+    "LeafSharding",
+    "describe_sharding",
 ]
 
 
@@ -221,3 +224,110 @@ def to_named(mesh, pspec_tree):
         pspec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Introspection: what did the rules decide, and where did they fall back?
+# ---------------------------------------------------------------------------
+
+
+class _ProbeSize:
+    """Axis-size stand-in that passes every ``_maybe`` check (``> 1`` is
+    True, every ``dim %`` is 0).  Probing ``_param_rule`` with it reveals
+    which leaves the rule *wants* to shard on an axis, independent of
+    whether the real axis size divides the leaf dims — the ground truth
+    for "replicated as a fallback" vs "replicated by design"."""
+
+    def __gt__(self, other):
+        return True
+
+    def __rmod__(self, other):
+        return 0
+
+
+def _probe_mesh(axis_names) -> SimpleNamespace:
+    return SimpleNamespace(
+        axis_names=tuple(axis_names),
+        devices=SimpleNamespace(shape=tuple(_ProbeSize() for _ in axis_names)),
+    )
+
+
+@dataclass(frozen=True)
+class LeafSharding:
+    """One parameter leaf's sharding decision on a concrete mesh."""
+
+    path: str
+    shape: tuple
+    elements: int
+    spec: tuple            # applied PartitionSpec entries (len == len(shape))
+    wanted: tuple          # entries the rule would pick if everything divided
+    shard: int             # product of applied mesh-axis sizes
+    model_shard: int       # applied "model"-axis factor only
+    data_shard: int        # applied "pod"/"data"-axis factor only
+    replicated_model: bool  # model sharding wanted but fell back to replicate
+
+
+def _entries(spec: P, ndim: int) -> tuple:
+    e = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    return e[:ndim]
+
+
+def describe_sharding(cfg: ArchConfig, mesh, *, fsdp: bool | None = None
+                      ) -> list[LeafSharding]:
+    """Per-leaf report of :func:`param_pspecs` on ``mesh``: the applied
+    spec, the spec the rules *wanted* (probed with an always-divisible
+    axis size), and whether the model-axis fallback to replication fired.
+
+    This is the accounting substrate for
+    :func:`repro.distributed.collectives.layout_collectives` — the planner
+    prices replication fallbacks from here instead of silently accepting
+    them.  ``mesh`` only needs ``axis_names``/``devices.shape``, so an
+    abstract stand-in works (no real devices required)."""
+    fsdp = fsdp_wanted(cfg, mesh) if fsdp is None else fsdp
+    shape_tree = T._shape_tree(cfg)
+    probe = _probe_mesh(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_sz = int(sizes.get("model", 1))
+    out: list[LeafSharding] = []
+
+    def leaf(path, shape):
+        name = path[-1].key
+        stacked = any(
+            getattr(p, "key", None) in ("blocks", "encoder") for p in path
+        )
+        spec = _param_rule(name, shape, stacked, mesh, cfg)
+        if fsdp:
+            spec = _zero_extend(spec, shape, mesh)
+        want = _param_rule(name, shape, stacked, probe, cfg)
+        applied = _entries(spec, len(shape))
+        wanted = _entries(want, len(shape))
+        shard = model_shard = data_shard = 1
+        for ax in applied:
+            if ax is None:
+                continue
+            sz = int(sizes.get(ax, 1))
+            shard *= sz
+            if ax == "model":
+                model_shard *= sz
+            elif ax in ("pod", "data"):
+                data_shard *= sz
+        n = 1
+        for d in shape:
+            n *= int(d)
+        out.append(LeafSharding(
+            path=".".join(str(getattr(p, "key", p)) for p in path),
+            shape=tuple(int(d) for d in shape),
+            elements=n,
+            spec=applied,
+            wanted=wanted,
+            shard=shard,
+            model_shard=model_shard,
+            data_shard=data_shard,
+            replicated_model=(model_sz > 1 and "model" in wanted
+                              and "model" not in applied),
+        ))
+        return spec
+
+    jax.tree_util.tree_map_with_path(
+        leaf, shape_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return out

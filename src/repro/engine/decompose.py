@@ -35,6 +35,7 @@ __all__ = [
     "LM_LATENCY_COLUMNS",
     "ledger_latency_columns",
     "classwise_seconds",
+    "collective_seconds",
 ]
 
 _I_W = FEATURE_NAMES.index("mem_w")
@@ -231,6 +232,26 @@ def classwise_seconds(columns: dict, coeffs: dict) -> np.ndarray:
         if c:
             total = total + c * np.asarray(col, dtype=np.float64)
     return total
+
+
+def collective_seconds(collective_bytes, device) -> np.ndarray:
+    """Seconds a device spends moving ``collective_bytes`` of collective
+    traffic — the planner's layout-pricing bridge.
+
+    When the device carries campaign-fitted class-wise constants
+    (``class_coeffs["lm_latency"]["collective"]``, grown by
+    ``campaign.fit.fit_hlo_constants`` from >1-device measurements), the
+    fitted coefficient prices the bytes — the SAME column the NNLS solved
+    over, so a layout's collective term and a measured cell's agree by
+    construction.  Without a fitted coefficient the roofline denominator
+    (``ici_bw``, the third :func:`lm_roofline_terms` term) is the
+    documented fallback."""
+    b = np.asarray(collective_bytes, dtype=np.float64)
+    coeffs = device.class_coeffs.get("lm_latency") or {}
+    c = float(coeffs.get("collective", 0.0))
+    if c > 0.0:
+        return c * b
+    return b / device.ici_bw
 
 
 def memory_terms(feats: np.ndarray, bytes_per_el: int) -> tuple[np.ndarray, np.ndarray]:

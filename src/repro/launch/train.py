@@ -59,14 +59,26 @@ def main() -> None:
                          "answered by the forest with zero compiles, falling "
                          "back to the analytical AOT path only for cells the "
                          "forest cannot answer")
+    ap.add_argument("--auto-mesh", type=int, default=None, metavar="N",
+                    help="let the auto-sharding planner (repro.planner) pick "
+                         "the cheapest data×model layout of N devices for "
+                         "this cell (max_pipe=1: the trainer has no pipeline "
+                         "schedule); builds the winning mesh when N devices "
+                         "are visible, otherwise reports the plan and trains "
+                         "unsharded")
+    ap.add_argument("--n-micro", type=int, default=8,
+                    help="microbatches per step assumed by the planner's "
+                         "pipeline-bubble model")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     shape = ShapeSpec("cli", args.seq, args.batch, "train")
 
     admission = None
+    plan = None
     if (args.memory_budget_gb is not None or args.device is not None
-            or args.lm_forest is not None or args.energy_budget_j is not None):
+            or args.lm_forest is not None or args.energy_budget_j is not None
+            or args.auto_mesh is not None):
         from repro.engine import (
             AnalyticalBackend,
             CostEngine,
@@ -89,6 +101,20 @@ def main() -> None:
             device=device,
         )
 
+        if args.auto_mesh is not None:
+            from repro.planner import LayoutPlanner
+
+            plan = LayoutPlanner(engine, reduced=args.reduced).plan(
+                args.arch, shape, args.auto_mesh,
+                max_pipe=1, n_micro=args.n_micro)
+            print(plan.table(top=5))
+            if plan.chosen is None:
+                raise RuntimeError(
+                    f"auto-mesh: no runnable layout of {args.auto_mesh} "
+                    f"devices for {args.arch} × {shape.name}; refused: "
+                    + "; ".join(f"{r.layout.descriptor}: {r.reason}"
+                                for r in plan.refused))
+
         def admission(cfg, shape):
             ok, info = engine.admit(
                 CostQuery(arch=args.arch, bs=shape.global_batch,
@@ -103,6 +129,16 @@ def main() -> None:
             info["predicted_energy_j"] = info["energy_j"]
             if device is not None:
                 info["device"] = device.name
+            if plan is not None and plan.chosen is not None:
+                # The planner-selected layout's predicted costs, reported
+                # at admission time alongside the single-device gate.
+                c = plan.chosen
+                info["auto_mesh"] = {
+                    "layout": c.layout.descriptor,
+                    "phi_ms": c.phi_ms,
+                    "gamma_mb": c.gamma_mb,
+                    "energy_j": c.energy_j,
+                }
             return ok, info
 
     # Pre-tune kernel block sizes for this cell (abstract trace, no
@@ -116,11 +152,30 @@ def main() -> None:
         print(f"autotune: {warm['misses']} kernel configs tuned "
               f"({warm['hits']} cached)")
 
+    # Build the planner's winning mesh when the host actually has the
+    # devices; a short host still gets the full plan report above (the
+    # structured MeshSpecError names the deficit if forced).
+    mesh = None
+    if plan is not None and plan.chosen is not None:
+        import jax
+
+        from repro.launch.mesh import make_mesh
+
+        chosen = plan.chosen.layout
+        if len(jax.devices()) >= chosen.n_devices:
+            mesh = make_mesh(chosen.mesh_shape, chosen.mesh_axes)
+            print(f"auto-mesh: built {chosen.descriptor} "
+                  f"({chosen.data}-way data × {chosen.model}-way model)")
+        else:
+            print(f"auto-mesh: {chosen.descriptor} needs "
+                  f"{chosen.n_devices} devices, host has "
+                  f"{len(jax.devices())} — plan reported, training unsharded")
+
     opt = OptimizerConfig(kind="adamw", lr=args.lr, warmup_steps=10,
                           total_steps=max(args.steps, 100))
     tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                          grad_compression=args.grad_compression)
-    trainer = Trainer(cfg, shape, opt, tcfg, admission=admission)
+    trainer = Trainer(cfg, shape, opt, tcfg, mesh=mesh, admission=admission)
     out = trainer.train(args.steps)
     h = out["history"]
     print(json.dumps({

@@ -1,0 +1,25 @@
+"""Auto-sharding planner: cost-model-driven mesh layout search.
+
+Public surface: enumerate the (pipe × data × model) layout space
+(:func:`enumerate_layouts`), price + rank it with zero compiles
+(:class:`LayoutPlanner` → :class:`LayoutPlan`), and build the winning
+mesh through the shared :func:`repro.launch.mesh.make_mesh` validator.
+CLI: ``python -m repro.planner plan|explain``.
+"""
+
+from repro.planner.layouts import MeshLayout, enumerate_layouts
+from repro.planner.planner import (
+    LayoutDecision,
+    LayoutPlan,
+    LayoutPlanner,
+    LayoutRefusal,
+)
+
+__all__ = [
+    "MeshLayout",
+    "enumerate_layouts",
+    "LayoutDecision",
+    "LayoutRefusal",
+    "LayoutPlan",
+    "LayoutPlanner",
+]

@@ -1,0 +1,439 @@
+"""Auto-sharding planner: enumeration, pricing, refusal semantics,
+zero-compile guarantee, the shared mesh validator, and the collective
+calibration metadata the planner's pricing consumes."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeSpec
+from repro.configs.registry import get_config
+from repro.distributed.collectives import abstract_mesh, layout_collectives
+from repro.engine.devices import DeviceSpec
+from repro.launch.mesh import MeshSpecError, make_mesh, validate_mesh_spec
+from repro.planner import LayoutPlanner, MeshLayout, enumerate_layouts
+
+TRAIN_4 = ShapeSpec("t4", 16, 4, "train")
+
+
+def _planner(device, **base):
+    base = {"phi_ms": 100.0, "gamma_mb": 100.0, "energy_j": 1.0, **base}
+    return LayoutPlanner(device=device, reduced=True, base=base)
+
+
+def _device(**kw):
+    kw.setdefault("name", "test_dev")
+    kw.setdefault("peak_flops", 1e12)
+    kw.setdefault("hbm_bw", 1e11)
+    kw.setdefault("ici_bw", 1e9)
+    kw.setdefault("hbm_bytes", 1e15)  # effectively no memory refusals
+    return DeviceSpec(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Layout enumeration
+# ---------------------------------------------------------------------------
+
+
+class TestEnumeration:
+    def test_deterministic_and_complete(self):
+        a = enumerate_layouts(16)
+        b = enumerate_layouts(16)
+        assert a == b                       # byte-identical across calls
+        assert a == sorted(a)               # deterministic order
+        assert len(set(a)) == len(a)        # no duplicates
+        assert all(l.n_devices == 16 for l in a)
+        # every ordered factorization of 16 into 3 parts: C(4+2, 2) = 15
+        assert len(a) == 15
+
+    def test_max_pipe_prunes_at_enumeration(self):
+        ls = enumerate_layouts(16, max_pipe=1)
+        assert all(l.pipe == 1 for l in ls)
+        assert len(ls) == 5                 # (d, m) divisor pairs of 16
+
+    def test_parse_roundtrip(self):
+        lay = MeshLayout.parse("2x4x8")
+        assert (lay.pipe, lay.data, lay.model) == (2, 4, 8)
+        assert MeshLayout.parse(lay.descriptor) == lay
+        assert MeshLayout.parse("4x8") == MeshLayout(1, 4, 8)
+        with pytest.raises(ValueError):
+            MeshLayout.parse("2x4x8x16")
+        with pytest.raises(ValueError):
+            MeshLayout.parse("nope")
+
+    def test_mesh_shape_convention(self):
+        lay = MeshLayout(2, 4, 8)
+        assert lay.mesh_shape == (4, 8)     # model axis last, pipe outside
+        assert lay.mesh_axes == ("data", "model")
+        assert lay.n_devices == 64
+
+
+# ---------------------------------------------------------------------------
+# Shared mesh validator (the make_mesh bugfix)
+# ---------------------------------------------------------------------------
+
+
+class TestMeshValidator:
+    def test_device_deficit_is_structured(self):
+        import jax
+
+        avail = len(jax.devices())
+        with pytest.raises(MeshSpecError) as ei:
+            make_mesh((avail + 1, 2), ("data", "model"))
+        e = ei.value
+        assert e.needed == (avail + 1) * 2
+        assert e.available == avail
+        assert e.deficit == e.needed - avail
+        assert str(e.needed) in str(e) and "short" in str(e)
+
+    def test_non_positive_dims(self):
+        with pytest.raises(MeshSpecError, match="non-positive"):
+            validate_mesh_spec((2, 0), ("data", "model"))
+        with pytest.raises(MeshSpecError, match="non-positive"):
+            validate_mesh_spec((-1,), ("data",))
+
+    def test_duplicate_and_mismatched_axes(self):
+        with pytest.raises(MeshSpecError, match="unique"):
+            validate_mesh_spec((2, 2), ("data", "data"))
+        with pytest.raises(MeshSpecError, match="dims"):
+            validate_mesh_spec((2, 2), ("data",))
+        with pytest.raises(MeshSpecError, match="empty"):
+            validate_mesh_spec((), ())
+
+    def test_is_a_value_error(self):
+        # callers catching the old ValueError keep working
+        with pytest.raises(ValueError):
+            validate_mesh_spec((2, 2), ("data",))
+
+    def test_valid_spec_returns_count(self):
+        assert validate_mesh_spec((2, 4), ("data", "model")) == 8
+        assert validate_mesh_spec((2, 4), ("data", "model"), available=8) == 8
+
+    def test_make_mesh_single_device_still_works(self):
+        mesh = make_mesh((1, 1), ("data", "model"))
+        assert mesh.devices.size == 1
+
+
+# ---------------------------------------------------------------------------
+# Layout collective/memory accounting
+# ---------------------------------------------------------------------------
+
+
+class TestLayoutCollectives:
+    def test_single_device_moves_nothing(self):
+        cfg = get_config("qwen3-4b", reduced=True)
+        lc = layout_collectives(cfg, TRAIN_4, abstract_mesh((1, 1)))
+        assert lc.total_bytes == 0.0
+        assert lc.replicated == []
+        assert lc.bubble == 0.0
+
+    def test_dp_and_tp_charge_different_classes(self):
+        cfg = get_config("qwen3-4b", reduced=True)
+        dp = layout_collectives(cfg, TRAIN_4, abstract_mesh((2, 1)))
+        tp = layout_collectives(cfg, TRAIN_4, abstract_mesh((1, 2)))
+        assert dp.total_bytes > 0 and tp.total_bytes > 0
+        # DP grad exchange rides all_reduce (or the ZeRO pair); TP rides
+        # activation all_reduces only.
+        assert dp.per_class["ppermute"] == 0.0
+        assert tp.per_class["all_reduce"] > 0.0
+        assert tp.per_class["reduce_scatter"] == 0.0
+        # TP halves the per-device parameter bytes; DP doesn't.
+        assert tp.memory["param_bytes_dev"] < dp.memory["param_bytes_dev"]
+
+    def test_memory_split_scales_down_with_sharding(self):
+        cfg = get_config("qwen3-4b", reduced=True)
+        one = layout_collectives(cfg, TRAIN_4, abstract_mesh((1, 1)))
+        four = layout_collectives(cfg, TRAIN_4, abstract_mesh((2, 2)))
+        assert four.memory["total_bytes_dev"] < one.memory["total_bytes_dev"]
+        assert one.memory["param_bytes_total"] == \
+            four.memory["param_bytes_total"]
+
+    def test_pipeline_divides_params_and_adds_ppermute(self):
+        cfg = get_config("qwen3-4b", reduced=True)
+        flat = layout_collectives(cfg, TRAIN_4, abstract_mesh((1, 1)))
+        piped = layout_collectives(cfg, TRAIN_4, abstract_mesh((1, 1)),
+                                   pipe=2, n_micro=4)
+        assert piped.memory["param_bytes_dev"] == pytest.approx(
+            flat.memory["param_bytes_dev"] / 2)
+        assert piped.per_class["ppermute"] > 0.0
+        assert piped.bubble == pytest.approx(1 / 5)  # (S-1)/(M+S-1)
+
+    def test_indivisible_model_axis_priced_as_replication(self):
+        """The headline fallback semantics: a model axis nothing divides
+        must REPLICATE (recorded + priced), never produce an invalid
+        spec or silently vanish."""
+        cfg = get_config("qwen3-4b", reduced=True)  # d_model 128, vocab 512
+        lc = layout_collectives(cfg, TRAIN_4, abstract_mesh((1, 3)))
+        assert lc.replicated_fraction > 0.9
+        assert len(lc.replicated) > 0
+        # the replication penalty charges the model-axis grad all-reduce
+        assert lc.per_class["all_reduce"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Planner: planted-cost recovery, refusal semantics, ranking
+# ---------------------------------------------------------------------------
+
+
+class TestPlanner:
+    def test_planted_collective_coeff_recovers_cheapest_layout(self):
+        """Seed the device's fitted collective coefficient so high that
+        the collective term dominates everything: the planner must pick
+        exactly the layout an independent byte count says moves the
+        fewest bytes — provably cheapest by construction."""
+        dev = _device(class_coeffs={"lm_latency": {"collective": 1.0}})
+        cfg = get_config("qwen3-4b", reduced=True)
+        plan = _planner(dev).plan("qwen3-4b", TRAIN_4, 4,
+                                  cfg=cfg, max_pipe=1)
+        assert plan.ranked, plan.refused
+        bytes_of = {
+            d.layout: layout_collectives(
+                cfg, TRAIN_4,
+                abstract_mesh(d.layout.mesh_shape, d.layout.mesh_axes),
+                pipe=d.layout.pipe).total_bytes
+            for d in plan.ranked
+        }
+        expect = min(bytes_of, key=lambda l: (bytes_of[l], l.descriptor))
+        assert plan.chosen.layout == expect
+        # 1 s/B × kilobytes ⇒ ranking IS the byte ranking
+        order = [d.layout for d in plan.ranked]
+        assert order == sorted(order,
+                               key=lambda l: (bytes_of[l], l.descriptor))
+
+    def test_zero_collective_cost_prefers_pure_dp_over_pipeline(self):
+        """With collectives priced at ~0 (huge ici_bw, no fitted coeff)
+        the only differences are the bubble and replication: an
+        unbubbled full-width layout must beat any bubbled pipeline
+        split of the same device count."""
+        dev = _device(ici_bw=1e30)
+        plan = _planner(dev).plan("qwen3-4b", TRAIN_4, 4)
+        assert plan.chosen.layout.pipe == 1
+        dp = plan.decision_for("1x4x1")
+        piped = plan.decision_for("2x2x1")
+        assert piped is not None and dp.phi_ms < piped.phi_ms
+        assert piped.breakdown["bubble"] > 0.0
+
+    def test_indivisible_heads_ranked_with_penalty_not_refused(self):
+        """A model axis nothing divides (3-way on d_model 128) is priced
+        with the replication penalty and RANKED — never refused."""
+        dev = _device()
+        shape = ShapeSpec("t3", 16, 3, "train")
+        plan = _planner(dev).plan("qwen3-4b", shape, 3, max_pipe=1)
+        refused = {r.layout.descriptor for r in plan.refused}
+        assert "1x1x3" not in refused
+        tp = plan.decision_for("1x1x3")
+        assert tp is not None
+        assert tp.breakdown["replicated_fraction"] > 0.9
+        # full replication ⇒ the model axis speeds up (almost) nothing,
+        # so pure DP must rank strictly better
+        dp = plan.decision_for("1x3x1")
+        assert dp.phi_ms < tp.phi_ms
+        assert plan.chosen.layout == MeshLayout(1, 3, 1)
+
+    def test_batch_divisibility_refused_with_reason(self):
+        plan = _planner(_device()).plan(
+            "qwen3-4b", ShapeSpec("t2", 16, 2, "train"), 4, max_pipe=1)
+        reasons = {r.layout.descriptor: r.reason for r in plan.refused}
+        assert "1x4x1" in reasons
+        assert "not divisible" in reasons["1x4x1"]
+        assert plan.decision_for("1x4x1") is None
+
+    def test_pipe_refused_when_layers_dont_split(self):
+        cfg = get_config("qwen3-4b", reduced=True)  # 2 layers when reduced
+        plan = _planner(_device()).plan(
+            "qwen3-4b", TRAIN_4, 4, cfg=cfg)
+        reasons = {r.layout.descriptor: r.reason for r in plan.refused}
+        assert "4x1x1" in reasons and "pipeline stages" in reasons["4x1x1"]
+        # pipe=2 divides the 2-layer reduced stack: it must be ranked
+        assert plan.decision_for("2x2x1") is not None
+
+    def test_memory_refusal_names_capacity(self):
+        dev = _device(hbm_bytes=4e9)  # 4000 MB
+        plan = _planner(dev, gamma_mb=1e6).plan("qwen3-4b", TRAIN_4, 1)
+        assert plan.chosen is None
+        assert len(plan.refused) == 1
+        assert "capacity" in plan.refused[0].reason
+        # capacity planning view keeps it ranked
+        plan2 = _planner(dev, gamma_mb=1e6).plan(
+            "qwen3-4b", TRAIN_4, 1, check_memory=False)
+        assert plan2.chosen is not None
+
+    def test_plan_serializes(self):
+        import json
+
+        plan = _planner(_device()).plan("qwen3-4b", TRAIN_4, 4)
+        d = json.loads(json.dumps(plan.to_dict()))
+        assert d["chosen"]["layout"]["descriptor"] == \
+            plan.chosen.layout.descriptor
+        assert len(d["ranked"]) == len(plan.ranked)
+        assert d["meta"]["n_ranked"] + d["meta"]["n_refused"] == \
+            d["meta"]["n_layouts"]
+
+    def test_energy_conserves_power_model(self):
+        """Per-device energy scales with per-device time (same power
+        envelope); the fleet total multiplies by the device count."""
+        plan = _planner(_device()).plan("qwen3-4b", TRAIN_4, 4, max_pipe=1)
+        base = plan.base
+        for d in plan.ranked:
+            assert d.energy_j == pytest.approx(
+                base["energy_j"] * d.phi_ms / base["phi_ms"])
+            assert d.energy_total_j == pytest.approx(
+                d.energy_j * d.layout.n_devices)
+
+
+# ---------------------------------------------------------------------------
+# Zero-compile guarantee (the engine-backed path, compiler booby-trapped)
+# ---------------------------------------------------------------------------
+
+
+class _FakeLMForest:
+    """Fitted-forest stand-in: constant (Γ, Φ) per query, no jax anywhere."""
+
+    fitted = True
+    meta: dict = {}
+
+    def __init__(self, gamma_mb=200.0, phi_ms=50.0):
+        from repro.engine import get_device
+
+        self.gamma_mb, self.phi_ms = gamma_mb, phi_ms
+        self.default_device = get_device("host_cpu")
+
+    def content_hash(self):
+        return f"fake-{self.gamma_mb}-{self.phi_ms}"
+
+    def predict_queries(self, queries):
+        n = len(queries)
+        return (np.full(n, self.gamma_mb), np.full(n, self.phi_ms))
+
+
+def test_planner_zero_compiles(monkeypatch):
+    """The whole plan — base query through the engine, every layout
+    priced — with jax.jit AND the analytical AOT path booby-trapped."""
+    import jax
+
+    from repro.engine import (
+        AnalyticalBackend,
+        CostEngine,
+        ForestBackend,
+        get_device,
+    )
+
+    def boom(*a, **k):
+        raise AssertionError("planner pricing invoked the jax compiler")
+
+    monkeypatch.setattr(jax, "jit", boom)
+    monkeypatch.setattr(AnalyticalBackend, "_compile_arch", boom)
+
+    engine = CostEngine(ForestBackend(lm=_FakeLMForest()),
+                        device=get_device("tpu_v5e"))
+    plan = LayoutPlanner(engine, reduced=True).plan("qwen3-4b", TRAIN_4, 16)
+    assert plan.chosen is not None
+    assert plan.base["source"] == "forest"
+    assert plan.meta["n_ranked"] > 1
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+class TestCLI:
+    BASE = ["--arch", "qwen3-4b", "--device", "host_cpu", "--reduced",
+            "--base-phi-ms", "100", "--base-gamma-mb", "100",
+            "--base-energy-j", "1", "--seq", "16", "--batch", "4"]
+
+    def test_plan_table(self, capsys):
+        from repro.planner.__main__ import main
+
+        assert main(["plan", "--devices", "4", *self.BASE]) == 0
+        out = capsys.readouterr().out
+        assert "phi_ms" in out and "1x4x1" in out
+
+    def test_plan_json(self, capsys):
+        import json
+
+        from repro.planner.__main__ import main
+
+        assert main(["plan", "--devices", "4", "--json", *self.BASE]) == 0
+        d = json.loads(capsys.readouterr().out)
+        assert d["chosen"] is not None and d["n_devices"] == 4
+
+    def test_explain_ranked_and_refused(self, capsys):
+        import json
+
+        from repro.planner.__main__ import main
+
+        assert main(["explain", "--devices", "4", "--layout", "1x2x2",
+                     *self.BASE]) == 0
+        d = json.loads(capsys.readouterr().out)
+        assert d["layout"]["descriptor"] == "1x2x2"
+        assert "rank" in d or d.get("refused")
+
+    def test_explain_wrong_device_count(self, capsys):
+        from repro.planner.__main__ import main
+
+        assert main(["explain", "--devices", "4", "--layout", "1x2x4",
+                     *self.BASE]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Collective-calibration fit metadata (what the planner's pricing reads)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_meta_reports_collective_columns():
+    """Synthetic ledger with a planted collective price: the fit's meta
+    must say how many cells moved collective bytes and that the
+    collective column entered the class-wise system — the field the
+    threshold gate (and collective_seconds) depends on."""
+    from repro.campaign import fit_hlo_constants
+    from repro.engine.decompose import collective_seconds
+
+    c0, c_fl, c_coll = 1e-3, 5e-12, 3e-9
+    rng = np.random.default_rng(0)
+    records = []
+    for i in range(12):
+        fl = float(rng.uniform(1e6, 1e8))
+        cb = float(rng.uniform(1e5, 1e7)) if i % 2 else 0.0
+        classes = {
+            "matmul": {"flops": fl, "hbm_bytes": 0.0,
+                       "collective_bytes": 0.0, "count": 3},
+            "collective": {"flops": 0.0, "hbm_bytes": 0.0,
+                           "collective_bytes": cb, "count": 1},
+        }
+        phi_s = c0 + c_fl * fl + c_coll * cb
+        records.append({
+            "status": "ok", "device": "host_cpu", "plan_hash": "x",
+            "flops": fl, "hbm_bytes": 0.0, "collective_bytes": cb,
+            "cost_classes": classes, "phi_ms": phi_s * 1e3,
+        })
+    spec = fit_hlo_constants(records)
+    meta = spec.meta
+    assert meta["collective_cells"] == 6
+    assert meta["collective_column_fitted"] is True
+    assert "collective" in meta["classwise_columns"]
+    assert meta["collective_coeff_classwise"] == pytest.approx(
+        c_coll, rel=1e-3)
+    assert meta["collective_coeff_aggregate"] > 0.0
+    # and collective_seconds prices with the fitted coefficient
+    assert float(collective_seconds(1e6, spec)) == pytest.approx(
+        meta["collective_coeff_classwise"] * 1e6, rel=1e-9)
+
+
+def test_collective_seconds_roofline_fallback():
+    from repro.engine.decompose import collective_seconds
+
+    dev = _device(ici_bw=2e9)
+    assert float(collective_seconds(4e9, dev)) == pytest.approx(2.0)
+
+
+def test_collective_smoke_plan_spans_multidevice_meshes():
+    from repro.campaign.plan import collective_smoke_plan
+
+    plan = collective_smoke_plan()
+    meshes = {c.mesh for c in plan.cells}
+    assert {"1x1", "2x1", "1x2"} <= meshes
+    assert len(plan) == 6
+    # value semantics: re-enumeration is hash-stable
+    assert plan.plan_hash == collective_smoke_plan().plan_hash
