@@ -27,10 +27,17 @@ Runs both benchmarks in-process and enforces:
   req/s at equal ``n_slots`` (speedup ≥ ``SERVE_SPEEDUP_MIN``), records
   finite p50/p99 TTFT and per-token latency, its goodput is never worse,
   and the paged KV pool is smaller than the dense cache it replaced,
+* chunked prefill (docs/serve.md): greedy streams identical with and
+  without chunking, decode never stalls, the running-slot stall bound
+  drops from the whole prompt to one chunk, and deterministic step-count
+  TTFT p99 degrades at most 10%,
 * per kernel (incl. the moe_dispatch model), the autotuned config's
   modelled roofline time is never worse than the hand-coded default (the
   default is a candidate, so any violation means the cost model or
   search broke),
+* paged_decode (docs/kernels.md): the tuned flash-decode kernel is never
+  modelled slower than the XLA gather fallback at the serving shape, and
+  the serve_kv pool block jointly admits the kernel's tuned block_kv,
 * a second autotune pass over the bench grid is a pure cache hit.
 
 Exit code 1 with a FAIL line per violated threshold.
@@ -57,6 +64,13 @@ SERVE_SPEEDUP_MIN = 1.0         # continuous must never lose to lockstep
 # Under the seeded chaos plan the engine must keep a usable fraction of
 # its fault-free goodput (lax: CI wall-clock noise dominates the rest).
 CHAOS_GOODPUT_RATIO_MIN = 0.25
+# Chunked prefill (ISSUE 10): gated on the deterministic step-count
+# metrics (wall-clock ratios are reported but too noisy to gate on a
+# shared CI host).  TTFT in engine steps may degrade at most 10%.
+CHUNKED_TTFT_STEPS_RATIO_MAX = 1.10
+# The tuned paged_decode kernel must never be modelled slower than the
+# gather fallback at the serving bench shape.
+PAGED_DECODE_VS_GATHER_MIN = 1.0
 
 
 def main() -> int:
@@ -202,6 +216,39 @@ def main() -> int:
           f"paged KV pool {srv['kv_bytes'] / 1e6:.3g}MB < dense "
           f"{srv['kv_dense_bytes'] / 1e6:.3g}MB (block={srv['block_size']})")
 
+    # Chunked prefill (ISSUE 10 acceptance): greedy streams identical to
+    # the unchunked engine, decode never stalls, the running-slot stall
+    # bound drops from the whole prompt to one chunk, and step-count TTFT
+    # p99 degrades at most 10%.  All gated quantities are deterministic.
+    chk = serve_bench.run_chunked()
+    check(chk["streams_equal"],
+          "serve chunked greedy streams identical to unchunked")
+    check(chk["chunked"]["prefill_chunks"] > 0,
+          f"serve chunked prefill actually chunked "
+          f"({chk['chunked']['prefill_chunks']} chunks of "
+          f"{serve_bench.PREFILL_CHUNK})")
+    check(chk["chunked"]["max_decode_stall_steps"] == 0,
+          f"serve chunked decode never stalls "
+          f"(max stall {chk['chunked']['max_decode_stall_steps']} steps)")
+    check(chk["chunked"]["lost"] == 0 and chk["unchunked"]["lost"] == 0,
+          "serve chunked zero lost requests")
+    check(chk["chunked"]["max_prefill_stall_tokens"]
+          < chk["unchunked"]["max_prefill_stall_tokens"],
+          f"serve chunked running-slot stall bound "
+          f"{chk['chunked']['max_prefill_stall_tokens']} tokens < unchunked "
+          f"{chk['unchunked']['max_prefill_stall_tokens']} (one chunk, "
+          f"not the whole prompt)")
+    check(chk["ttft_steps_ratio"] <= CHUNKED_TTFT_STEPS_RATIO_MAX,
+          f"serve chunked step-TTFT p99 ratio "
+          f"{chk['ttft_steps_ratio']:.3f} <= {CHUNKED_TTFT_STEPS_RATIO_MAX} "
+          f"(chunked {chk['chunked']['ttft_steps_p99']:.1f} vs unchunked "
+          f"{chk['unchunked']['ttft_steps_p99']:.1f} steps)")
+    check(0 < chk["chunked"]["kv_touched_bytes"]
+          < chk["chunked"]["kv_gathered_bytes"],
+          f"serve chunked decode kernel touches "
+          f"{chk['chunked']['kv_touched_bytes'] / 1e6:.1f}MB < gather's "
+          f"{chk['chunked']['kv_gathered_bytes'] / 1e6:.1f}MB logical view")
+
     # Chaos (ISSUE 8 acceptance): under the seeded fault plan no request
     # is lost (all reach a typed terminal state), the planned faults
     # actually fired, the pool conserves, and goodput under faults holds
@@ -228,12 +275,26 @@ def main() -> int:
           f"(ratio {chaos['goodput_ratio']:.2f})")
 
     kern = kernel_bench.run()
-    for name in ("conv_mm", "flash_attention", "ssm_scan", "moe_dispatch"):
+    for name in ("conv_mm", "flash_attention", "ssm_scan", "moe_dispatch",
+                 "paged_decode"):
         r = kern[name]
         check(r["tuned_us"] <= r["default_us"] * (1 + 1e-9),
               f"{name} tuned model {r['tuned_us']:.2f}us <= "
               f"default {r['default_us']:.2f}us ({r['config']})")
-    check(kern["second_call_hits"] == 4 and kern["second_call_misses"] == 0,
+    # Flash-decode fast path (ISSUE 10): the tuned paged_decode kernel is
+    # never modelled slower than the XLA gather fallback at the serving
+    # shape, and the serve_kv pool block jointly admits the kernel's
+    # tuned block_kv (divisibility — no mid-block remainder handling).
+    check(kern["paged_decode"]["vs_gather"] >= PAGED_DECODE_VS_GATHER_MIN,
+          f"paged_decode tuned {kern['paged_decode']['tuned_us']:.2f}us "
+          f"beats gather {kern['paged_decode']['gather_us']:.2f}us "
+          f"({kern['paged_decode']['vs_gather']:.2f}x >= "
+          f"{PAGED_DECODE_VS_GATHER_MIN}x)")
+    check(kern["serve_kv_joint"]["aligned"],
+          f"serve_kv block_size {kern['serve_kv_joint']['block_size']} "
+          f"admits paged_decode block_kv "
+          f"{kern['serve_kv_joint']['block_kv']} (joint resolution)")
+    check(kern["second_call_hits"] == 6 and kern["second_call_misses"] == 0,
           f"autotune second pass pure cache hit "
           f"({kern['second_call_hits']} hits, {kern['second_call_misses']} misses)")
 

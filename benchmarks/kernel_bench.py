@@ -27,6 +27,8 @@ from repro.kernels.conv_mm.ref import conv_ref
 from repro.kernels.flash_attention import tiling as flash_tiling
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.moe_dispatch import tiling as moe_tiling
+from repro.kernels.paged_decode import tiling as pd_tiling
+from repro.kernels.serve_kv import tiling as kv_tiling
 from repro.kernels.ssm_scan import tiling as ssm_tiling
 from repro.kernels.ssm_scan.ref import ssd_ref
 from repro.launch.mesh import TPU_V5E
@@ -134,6 +136,45 @@ def run(print_fn=print) -> dict:
     results["moe_dispatch"] = _tuned_rows(tuner, "moe_dispatch", moe_shape,
                                           print_fn)
 
+    # paged decode: serving hot path — 8 slots, long KV, GQA, paged pool.
+    # The gather baseline is the XLA fallback at the same shape, priced by
+    # the same roofline; tuned kernel must never be slower (it touches only
+    # live blocks where the gather streams the whole logical view).  The
+    # pool block size matches what serve_kv's joint model resolves for
+    # this window (asserted below) — small pool blocks would drown the
+    # win in per-block grid-step overhead, which is exactly why the two
+    # are resolved jointly.
+    Bp, Hp, Hkvp, Dhp, NBp, bsp = 8, 32, 8, 128, 16, 256
+    pd_shape = pd_tiling.shape_key(Bp, Hp, Hkvp, Dhp, NBp, bsp, "bfloat16")
+    results["paged_decode"] = _tuned_rows(tuner, "paged_decode", pd_shape,
+                                          print_fn)
+    from repro.kernels.autotune import roofline_seconds
+    gather_us = roofline_seconds(pd_tiling.gather_cost(pd_shape),
+                                 get_device("tpu_v5e")) * 1e6
+    results["paged_decode"]["gather_us"] = gather_us
+    results["paged_decode"]["vs_gather"] = (
+        gather_us / max(results["paged_decode"]["tuned_us"], 1e-12))
+    print_fn(csv_line("kernel/paged_decode/model_gather_us", gather_us,
+                      f"vs_tuned={results['paged_decode']['vs_gather']:.2f}x "
+                      f"(full {NBp * bsp}-token logical view, no early exit)"))
+
+    # serve_kv ⇄ paged_decode joint resolution: the pool block size the
+    # serve_kv model picks must admit the kernel's tuned block_kv as a
+    # divisor (structural — candidates snap to the pool block).
+    kv_shape = kv_tiling.shape_key(Bp, NBp * bsp, Hkvp, Dhp, "bfloat16",
+                                   n_heads=Hp)
+    kv_bs = int(tuner.tune("serve_kv", kv_shape)["block_size"])
+    pd_joint_shape = pd_tiling.shape_key(
+        Bp, Hp, Hkvp, Dhp, -(-NBp * bsp // kv_bs), kv_bs, "bfloat16")
+    kv_bkv = int(tuner.tune("paged_decode", pd_joint_shape)["block_kv"])
+    results["serve_kv_joint"] = {
+        "block_size": kv_bs, "block_kv": kv_bkv,
+        "aligned": kv_bs % kv_bkv == 0,
+    }
+    print_fn(csv_line("kernel/serve_kv/joint_block_size", kv_bs,
+                      f"paged_decode_block_kv={kv_bkv} "
+                      f"aligned={kv_bs % kv_bkv == 0}"))
+
     # second visit to the whole grid must be pure cache hits (no re-search)
     h0, m0 = tuner.hits, tuner.misses
     for kernel, shape in (
@@ -145,13 +186,15 @@ def run(print_fn=print) -> dict:
         ("ssm_scan", ssm_tiling.shape_key(
             (B2, S2, Hh, P), Nst, dtype="float32")),
         ("moe_dispatch", moe_shape),
+        ("paged_decode", pd_shape),
+        ("serve_kv", kv_shape),
     ):
         tuner.tune(kernel, shape)
     results["second_call_hits"] = tuner.hits - h0
     results["second_call_misses"] = tuner.misses - m0
     print_fn(csv_line("kernel/autotune/second_call_hits",
                       results["second_call_hits"],
-                      f"misses={results['second_call_misses']} expect=4/0"))
+                      f"misses={results['second_call_misses']} expect=6/0"))
     return results
 
 

@@ -168,6 +168,7 @@ _BUILTIN_MODULES = (
     "repro.kernels.ssm_scan.tiling",
     "repro.kernels.moe_dispatch.tiling",
     "repro.kernels.serve_kv.tiling",
+    "repro.kernels.paged_decode.tiling",
 )
 
 

@@ -1,0 +1,15 @@
+"""Decode-specialized paged attention (single query, block-pool KV).
+
+The serving decode hot path: one query token per slot attends over that
+slot's KV history, which lives scattered across a fixed-size block pool
+behind a per-slot ``block_table``.  The kernel reads K/V directly from
+the pool (no gathered logical view) with online softmax, per-row
+``cache_len`` masking, block-granular early exit, GQA head-group
+broadcast and an optional split-KV partial reduction; see
+docs/kernels.md "paged_decode".
+"""
+
+from repro.kernels.paged_decode.ops import paged_decode_attention
+from repro.kernels.paged_decode.ref import paged_decode_ref
+
+__all__ = ["paged_decode_attention", "paged_decode_ref"]

@@ -1,0 +1,181 @@
+"""Paged single-query decode attention — Pallas TPU kernel.
+
+TPU mapping: grid = (B, Hkv, n_splits, NB/n_splits), block axis innermost.
+The block table and per-row cache lengths ride in scalar-prefetch SMEM
+(``PrefetchScalarGridSpec``) so the K/V ``BlockSpec`` index maps can chase
+``block_table[b, i]`` — each grid step DMAs ONE physical pool block for
+one KV head straight from HBM; the gathered ``(B, NB·bs)`` logical view
+the XLA fallback materialises never exists.
+
+Early exit is block-granular: row ``b`` owns ``cache_len[b]//bs + 1``
+live blocks, and the index map *clamps* dead steps to the last live
+block — consecutive dead steps fetch the same block, which Pallas's
+revisit elision turns into zero HBM traffic — while ``pl.when`` skips
+their compute entirely.  Inside a live block the score loop runs in
+``block_kv``-wide chunks (``block_kv`` divides the pool block size; the
+serve_kv tiling resolves the two jointly) with per-position
+``pos <= cache_len`` masking, so the freshly written token at
+``cache_len`` is attended and nothing past it is.
+
+Split-KV: with ``n_splits > 1`` each (b, kv head) is cut into
+``n_splits`` independent partial reductions (flash-decode style — a
+single query exposes only ``H/Hkv`` MXU rows, so long contexts need the
+KV axis for parallelism).  The kernel emits per-split unnormalised
+accumulators plus running (m, l) stats; :func:`combine_splits` merges
+them in one tiny jnp pass.
+
+VMEM per program (bf16, bs=64, Dh=128, rep=4): q/o 2 KiB + k/v blocks
+32 KiB + f32 acc/stats ~3 KiB ≈ 37 KiB « 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.autotune import largest_dividing_block
+
+__all__ = ["paged_decode_kernel", "combine_splits"]
+
+NEG_INF = -1e30
+_STAT_LANES = 128  # f32 stat scratch padded to one full lane register
+
+
+def _decode_body(bt_ref, cl_ref, q_ref, k_ref, v_ref,
+                 o_ref, m_ref, l_ref,
+                 acc_scr, m_scr, l_scr, *,
+                 scale, bs, block_kv, npb):
+    """One (batch row, kv head, split, block-step) program."""
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    j = pl.program_id(3)
+    i = s * npb + j                                 # global block index
+    rep, dh = q_ref.shape[-2], q_ref.shape[-1]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    cl = cl_ref[b]
+    n_live = cl // bs + 1                           # row's live block count
+
+    @pl.when(i < n_live)
+    def _live():
+        q = q_ref[0, 0].astype(jnp.float32) * scale             # (rep, dh)
+
+        def chunk(c, _):
+            k = k_ref[0, pl.dslice(c * block_kv, block_kv), 0, :].astype(
+                jnp.float32)                                    # (bkv, dh)
+            v = v_ref[0, pl.dslice(c * block_kv, block_kv), 0, :].astype(
+                jnp.float32)
+            sc = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)             # (rep, bkv)
+            pos = (i * bs + c * block_kv
+                   + jax.lax.broadcasted_iota(jnp.int32, (rep, block_kv), 1))
+            sc = jnp.where(pos <= cl, sc, NEG_INF)
+            m_prev = m_scr[:, 0]
+            l_prev = l_scr[:, 0]
+            m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[:, None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(axis=-1)
+            acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                            + jax.lax.dot_general(
+                                p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32))
+            m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+            l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+            return 0
+
+        jax.lax.fori_loop(0, bs // block_kv, chunk, 0)
+
+    # Unnormalised partials flush when the split's output block rotates.
+    o_ref[0, 0, 0] = acc_scr[...]
+    m_ref[0, 0, 0] = m_scr[:, 0]
+    l_ref[0, 0, 0] = l_scr[:, 0]
+
+
+def combine_splits(acc, m, l, out_dtype):
+    """Merge per-split partials: acc/m/l are (B, Hkv, n_splits, rep[, Dh])
+    f32 → (B, H, Dh).  Dead splits carry (acc=0, m=NEG_INF, l=0) and
+    vanish under the global-max renormalisation (NEG_INF is finite, so
+    the exp underflows to exactly 0 instead of producing NaN)."""
+    B, Hkv, n_splits, rep, Dh = acc.shape
+    m_g = jnp.max(m, axis=2, keepdims=True)                 # (B, Hkv, 1, rep)
+    w = jnp.exp(m - m_g)                                    # (B, Hkv, s, rep)
+    l_g = jnp.sum(w * l, axis=2)                            # (B, Hkv, rep)
+    o = jnp.sum(w[..., None] * acc, axis=2)                 # (B, Hkv, rep, Dh)
+    l_g = jnp.where(l_g == 0.0, 1.0, l_g)  # fully-masked rows (idle slots)
+    return (o / l_g[..., None]).reshape(B, Hkv * rep, Dh).astype(out_dtype)
+
+
+def paged_decode_kernel(q, k_pool, v_pool, block_table, cache_len, *,
+                        scale: float | None = None,
+                        block_kv: int | None = None,
+                        n_splits: int = 1,
+                        interpret: bool = False):
+    """q: (B, H, Dh); k/v_pool: (P, bs, Hkv, Dh); block_table: (B, NB);
+    cache_len: (B,) → (B, H, Dh).  Attends positions ``<= cache_len[b]``.
+    """
+    B, H, Dh = q.shape
+    bs, Hkv = k_pool.shape[1], k_pool.shape[2]
+    NB = block_table.shape[1]
+    assert H % Hkv == 0, (H, Hkv)
+    rep = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    block_kv = largest_dividing_block(bs, block_kv or 128)
+    n_splits = max(1, min(int(n_splits), NB))
+    npb = -(-NB // n_splits)                       # blocks per split
+
+    qr = q.reshape(B, Hkv, rep, Dh)
+
+    def kv_index(b, h, s, j, bt_ref, cl_ref):
+        i = s * npb + j
+        n_live = cl_ref[b] // bs + 1
+        live = jnp.minimum(i, n_live - 1)          # clamp dead steps →
+        return (bt_ref[b, live], 0, h, 0)          # revisit elision, no DMA
+
+    grid = (B, Hkv, n_splits, npb)
+    kernel = functools.partial(_decode_body, scale=scale, bs=bs,
+                               block_kv=block_kv, npb=npb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # block_table, cache_len
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, Dh), lambda b, h, s, j, bt, cl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, Dh), kv_index),
+            pl.BlockSpec((1, bs, 1, Dh), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, rep, Dh),
+                         lambda b, h, s, j, bt, cl: (b, h, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, rep),
+                         lambda b, h, s, j, bt, cl: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, rep),
+                         lambda b, h, s, j, bt, cl: (b, h, s, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, Dh), jnp.float32),          # acc
+            pltpu.VMEM((rep, _STAT_LANES), jnp.float32),  # running max
+            pltpu.VMEM((rep, _STAT_LANES), jnp.float32),  # running sum
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, n_splits, rep, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_splits, rep), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_splits, rep), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_table, cache_len, qr, k_pool, v_pool)
+    return combine_splits(acc, m, l, q.dtype)

@@ -1,22 +1,27 @@
 """Tiling search space + static cost model for the paged serve KV cache.
 
 The serving engine stores K/V in fixed-size blocks (``PagedKVCache``);
-every decode step gathers each slot's block list back into a contiguous
-view and attends over it.  ``block_size`` is the one knob, and it trades
-two costs the roofline ranker can see:
+``block_size`` is the one knob.  Since the decode-specialised
+``paged_decode`` kernel landed, the consumer of the pool layout is that
+kernel, so this model resolves the pool block size **jointly** with it:
+each candidate ``bs`` is priced by running the paged_decode cost model
+at its own default config for a pool of ``bs``-sized blocks spanning the
+context window.  Two things follow structurally:
 
-* **internal fragmentation** — a sequence of length ``ctx`` occupies
-  ``ceil(ctx/bs)·bs`` pool tokens, so the gather streams on average an
-  extra ``bs/2`` tokens of dead K/V per slot per step (HBM bytes grow
-  with ``bs``);
-* **gather/step overhead** — each block is one scatter/gather descriptor,
-  so per-step sequenced work scales with ``ceil(ctx/bs)`` per slot
-  (``n_steps`` shrinks with ``bs``), and tiny blocks starve the MXU
-  (``mxu_min_dim``).
+* the kernel's ``block_kv`` candidates divide the pool block size by
+  construction (``largest_dividing_block`` over the same seed list), so
+  the two tuners cannot pick incompatible blockings;
+* the fragmentation/step-overhead trade-off the old hand-rolled model
+  priced is inherited — the kernel streams each *live* block in full
+  (``ceil(ctx/bs)`` blocks ≈ ctx + fragmentation tokens) and pays
+  sequenced steps per live block, so big blocks still cost dead-token
+  bandwidth and small blocks still cost loop trips and MXU underfill.
 
-Costs are modelled at the expected steady-state occupancy ``max_len/2``
-(uniform admission over the context window), matching how the serve
-bench exercises mixed-length traces.
+On top of the kernel launch the pool itself pays the step's scatter
+write and the block-table re-read, added here.  Costs are modelled at
+the expected steady-state occupancy ``max_len/2`` (uniform admission
+over the context window), matching the serve bench's mixed-length
+traces.
 """
 
 from __future__ import annotations
@@ -27,6 +32,7 @@ from repro.kernels.autotune import (
     bytes_per_element,
     register_tiling,
 )
+from repro.kernels.paged_decode import tiling as pd_tiling
 
 __all__ = ["shape_key", "candidates", "cost", "default"]
 
@@ -34,8 +40,9 @@ _BLOCK_SEEDS = (16, 32, 64, 128, 256, 512)
 
 
 def shape_key(n_slots: int, max_len: int, n_kv_heads: int, head_dim: int,
-              dtype) -> dict:
+              dtype, n_heads: int | None = None) -> dict:
     return {"B": int(n_slots), "L": int(max_len), "Hkv": int(n_kv_heads),
+            "H": int(n_heads if n_heads is not None else n_kv_heads),
             "Dh": int(head_dim), "dtype": str(dtype)}
 
 
@@ -52,28 +59,25 @@ def default(shape: dict) -> dict:
 
 def cost(shape: dict, config: dict) -> KernelCost:
     B, L = shape["B"], shape["L"]
+    H = shape.get("H", shape["Hkv"])
     Hkv, Dh = shape["Hkv"], shape["Dh"]
     bs = max(1, min(int(config.get("block_size", L)), L))
     bpe = bytes_per_element(shape["dtype"])
+    NB = max(1, -(-L // bs))           # full-window table width
 
-    ctx = L / 2.0                      # expected steady-state occupancy
-    padded = ctx + bs / 2.0            # + mean fragmentation per slot
-    n_blocks = max(1, -(-int(ctx) // bs))
-    # decode-step attention over the gathered view: qk^T + pv
-    flops = 4.0 * B * Hkv * padded * Dh
-    # K/V streamed once per step (incl. dead fragmentation tokens), the
-    # step's own k/v written once, block tables re-read every step
-    hbm = (bpe * 2.0 * B * padded * Hkv * Dh
-           + bpe * 2.0 * B * Hkv * Dh
-           + 4.0 * B * n_blocks)
-    vmem = (bpe * 2.0 * bs * Hkv * Dh   # one K and one V block resident
-            + 4.0 * bs                   # f32 score strip for the block
-            + 4.0 * Dh)                  # f32 accumulator row
+    # Joint resolution: price this pool layout through the decode
+    # kernel's own cost model at the kernel's default config for bs.
+    pd_shape = pd_tiling.shape_key(B, H, Hkv, Dh, NB, bs, shape["dtype"])
+    pd = pd_tiling.cost(pd_shape, pd_tiling.default(pd_shape))
+
+    # + the pool's own per-step work: scatter the step's K/V row in,
+    # re-read the block tables
+    hbm = pd.hbm_bytes + bpe * 2.0 * B * Hkv * Dh + 4.0 * B * NB
     return KernelCost(
         op="serve_kv", op_class="matmul", origin="kernel",
-        flops=flops, hbm_bytes=hbm, vmem_bytes=vmem,
-        n_steps=B * n_blocks,
-        mxu_min_dim=min(bs, Dh),
+        flops=pd.flops, hbm_bytes=hbm, vmem_bytes=pd.vmem_bytes,
+        n_steps=pd.n_steps,
+        mxu_min_dim=pd.mxu_min_dim,
     )
 
 

@@ -269,6 +269,37 @@ def blocked_attention(
     return o[:, :Sq]
 
 
+def _paged_decode_fast_path(q, k_pool, v_pool, block_table, cache_len):
+    """Dispatch the S == 1 paged decode step to the specialised kernel,
+    or return ``None`` to fall through to the gather + dense path.
+
+    ``REPRO_PAGED_DECODE`` (read per call, so tests can flip it):
+      ``auto``      kernel on TPU, gather elsewhere (default — keeps the
+                    CPU path bit-identical to the pre-kernel behaviour)
+      ``kernel``    always the Pallas kernel (interpret mode off-TPU)
+      ``interpret`` force interpret mode (debugging/tests)
+      ``gather``    always the gather + dense fallback
+    """
+    import os
+
+    mode = os.environ.get("REPRO_PAGED_DECODE", "auto").lower()
+    if mode == "gather":
+        return None
+    import jax as _jax
+
+    if mode == "auto" and _jax.default_backend() != "tpu":
+        return None
+    from repro.kernels.paged_decode import paged_decode_attention
+
+    impl = {"auto": "kernel", "kernel": "kernel",
+            "interpret": "interpret"}.get(mode)
+    if impl is None:  # unknown value: be conservative, gather
+        return None
+    o = paged_decode_attention(q[:, 0], k_pool, v_pool, block_table,
+                               cache_len, impl=impl)
+    return o[:, None]  # (B, 1, H, Dh)
+
+
 def attention_block(
     x, p, cfg, *,
     positions,
@@ -289,8 +320,10 @@ def attention_block(
     ``cache_len`` may be a per-row vector — decode slots at different fill
     levels write their new KV at per-row offsets (continuous batching).
     With a paged cache, K/V live in a fixed-size block pool indexed through
-    ``block_table``; the step scatters the new token's KV into its block
-    and attends over the gathered logical view (decode, S == 1, only).
+    ``block_table``; the step scatters the new tokens' KV into their blocks
+    and attends either via the decode-specialised paged kernel (S == 1,
+    ``REPRO_PAGED_DECODE``) or over the gathered logical view (fallback,
+    and the S > 1 chunked-prefill path).
     """
     B, S, D = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
@@ -317,24 +350,39 @@ def attention_block(
             kv_len = None
             k_full, v_full = k, v
         elif "k_pool" in cache:
-            # Paged decode: scatter the new token's KV into its block, then
-            # attend over the gathered (B, NB·bs) logical view.  Slot i's
-            # token lands at logical position cache_len[i] = physical
-            # (block_table[i, len//bs], len % bs).
-            assert S == 1, "paged KV cache is a single-token decode path"
+            # Paged path: scatter the S new tokens' KV into their blocks.
+            # Slot i's token t lands at logical position cache_len[i] + t =
+            # physical (block_table[i, pos//bs], pos % bs).  S == 1 is the
+            # decode step; S > 1 is a chunked-prefill chunk riding the same
+            # path (right-padded rows route their junk positions to block
+            # indices past the row's live table entries — the caller sizes
+            # the table so those columns exist and point at scratch).
             kp, vp = cache["k_pool"], cache["v_pool"]
             bs_blk = kp.shape[1]
-            blk = cache_len // bs_blk
-            off = cache_len % bs_blk
-            rows = jnp.arange(B)
-            phys = block_table[rows, blk]                     # (B,)
-            kp = kp.at[phys, off].set(k[:, 0].astype(kp.dtype))
-            vp = vp.at[phys, off].set(v[:, 0].astype(vp.dtype))
+            cl = (cache_len if jnp.ndim(cache_len)
+                  else jnp.full((B,), cache_len, jnp.int32))
+            tok_pos = cl[:, None] + jnp.arange(S)            # (B, S)
+            blk = tok_pos // bs_blk
+            off = tok_pos % bs_blk
+            phys = block_table[jnp.arange(B)[:, None], blk]  # (B, S)
+            kp = kp.at[phys, off].set(k.astype(kp.dtype))
+            vp = vp.at[phys, off].set(v.astype(vp.dtype))
             new_cache = {"k_pool": kp, "v_pool": vp}
+            kv_len = cl + S - 1                              # (B,)
+            if S == 1 and mask_kind == "causal":
+                # Decode fast path: single-query paged attention reads K/V
+                # straight from the pool (no gathered logical view), with
+                # block-granular early exit at each row's last live block.
+                # REPRO_PAGED_DECODE picks the impl; the gather fallback
+                # below stays the CPU default and exactness oracle.
+                o = _paged_decode_fast_path(q, kp, vp, block_table, kv_len)
+                if o is not None:
+                    out = jnp.einsum("bshk,hkd->bsd", o,
+                                     p["wo"].reshape(H, Dh, D))
+                    return out, new_cache
             k_full = kp[block_table].reshape(B, -1, Hkv, Dh)  # (B, NB·bs, ·)
             v_full = vp[block_table].reshape(B, -1, Hkv, Dh)
             k_pos = jnp.arange(k_full.shape[1])
-            kv_len = cache_len + S - 1                        # (B,)
         else:
             kc, vc = cache["k"], cache["v"]
             k_pos = jnp.arange(kc.shape[1])

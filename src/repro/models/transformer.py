@@ -417,6 +417,9 @@ def prefill(params, batch, cfg: ArchConfig, *, max_len: int | None = None):
 
 def decode_step(params, cache, batch, cfg: ArchConfig):
     """One-token decode.  batch: tokens (B,1), cache_len (), [memory].
+    With a paged cache, tokens may be (B,S) — chunked prefill feeds
+    prompt chunks through this same path (scatter S tokens, attend
+    causally from each row's cache_len offset).
 
     Ragged / continuous-batching extensions (serve path):
 

@@ -10,6 +10,12 @@ leave the running batch *every step*:
 * admitted requests prefill **individually** into a free slot (B=1 at a
   power-of-two bucketed length, left-padded) while other slots keep
   decoding — the prefill/decode split;
+* prompts longer than ``prefill_chunk`` (when set) prefill in **chunks**
+  interleaved with decode steps: each engine step advances every
+  mid-prefill slot by one chunk through the paged S>1 decode path, so a
+  running slot's inter-token gap is bounded by one chunk's cost instead
+  of a whole long prompt's (greedy streams are unchanged — the first new
+  token is sampled at the same logical position);
 * the KV lands in the block pool (:class:`PagedKVCache`) and grows
   **incrementally**: admission allocates only the blocks the prefill
   needs, and decode allocates one more each time a request's write
@@ -42,8 +48,9 @@ Mispredicted load is a handled event, not a crash or a livelock
   let tests and the chaos bench assert on all of the above.
 
 Shape stability: prefill retraces once per prompt-length bucket, decode
-once per power-of-two block-table width — a long-lived engine compiles
-O(log max_len) functions total, independent of traffic.
+once per power-of-two block-table width, chunked prefill once per
+(pow2 chunk width, pow2 table width) pair — a long-lived engine compiles
+O(log² max_len) functions total, independent of traffic.
 """
 
 from __future__ import annotations
@@ -87,6 +94,8 @@ class ContinuousConfig:
     seed: int = 0
     block_size: int | None = None     # None → serve_kv tiling via TuningCache
     pool_tokens: int | None = None    # None → n_slots·max_len / 2 budget
+    prefill_chunk: int | None = None  # chunked prefill: max tokens prefilled
+    #                                   per engine step (None = whole prompt)
     gamma_budget_mb: float | None = None
     energy_budget_j: float | None = None   # per-step power/thermal envelope
     safety_margin: float = 0.1
@@ -138,8 +147,21 @@ class ContinuousEngine:
         self._admit_seq = 0
         self._cache_len = np.zeros(scfg.n_slots, np.int64)
         self._last_tok = np.zeros(scfg.n_slots, np.int32)
+        self._prefilling = np.zeros(scfg.n_slots, bool)  # mid-chunked-prefill
         self._step = 0
         self.decode_steps = 0
+        # Decode-path observability (metrics()): stall = a step where a
+        # decodable slot existed but no decode ran (0 by construction —
+        # chunked prefill interleaves, it never starves decode).
+        self._stall_run = 0
+        self.max_decode_stall_steps = 0
+        # Widest prefill forward (padded tokens) run while decodable slots
+        # were waiting — the deterministic stall bound a running slot can
+        # see between two of its tokens.  Chunked prefill caps this at
+        # _next_pow2(prefill_chunk); unchunked it is the whole prompt.
+        self.max_prefill_stall_tokens = 0
+        self.kv_gathered_bytes = 0.0   # (B · nb) blocks the gather path reads
+        self.kv_touched_bytes = 0.0    # live blocks the decode kernel touches
         # Robustness counters — surfaced via metrics() so tests and the
         # chaos bench assert on events instead of log-scraping.
         self.counters = {
@@ -152,6 +174,7 @@ class ContinuousEngine:
             "alloc_denied": 0,       # pool alloc failures (real or injected)
             "failovers": 0,          # health step-downs (mirror of health)
             "degraded_steps": 0,     # steps taken in static degraded mode
+            "prefill_chunks": 0,     # chunked-prefill chunks processed
         }
 
         self._key = jax.random.PRNGKey(scfg.seed)
@@ -167,12 +190,17 @@ class ContinuousEngine:
         self._sample = jax.jit(sample)
         self._prefills: dict[int, object] = {}
         self._decodes: dict[int, object] = {}
+        self._chunks: dict[tuple[int, int], object] = {}
 
     # ------------------------------------------------------------------
 
     @property
     def n_running(self) -> int:
         return sum(r is not None for r in self.slots)
+
+    def _has_decodable(self) -> bool:
+        return any(r is not None and not self._prefilling[i]
+                   for i, r in enumerate(self.slots))
 
     @property
     def idle(self) -> bool:
@@ -191,6 +219,7 @@ class ContinuousEngine:
 
     def submit(self, request: Request) -> Request:
         self.submitted += 1
+        request.step_submitted = self._step
         if (self.scfg.max_queue is not None
                 and len(self.queue) >= self.scfg.max_queue):
             # Bounded wait queue: shed at the door with a typed refusal
@@ -226,6 +255,17 @@ class ContinuousEngine:
             self._decodes[nb] = fn
         return fn
 
+    def _chunk_fn(self, width: int, nb: int):
+        # One chunked-prefill trace per (pow2 chunk width, pow2 table
+        # width) pair — a B=1, S=width pass through the same paged
+        # decode_step path (scatter S tokens, attend causally).
+        fn = self._chunks.get((width, nb))
+        if fn is None:
+            fn = jax.jit(lambda p, c, b: T.decode_step(p, c, b, self.cfg),
+                         donate_argnums=(1,))
+            self._chunks[(width, nb)] = fn
+        return fn
+
     # ------------------------------------------------------------------
     # deadlines, TTL, shedding (requests leave without a crash)
 
@@ -251,7 +291,9 @@ class ContinuousEngine:
             self.slots[req.slot] = None
             self._cache_len[req.slot] = 0
             self._last_tok[req.slot] = 0
+            self._prefilling[req.slot] = False
             req.slot = None
+        req.prefill_pos = 0
         self.expired.append(req)
 
     def _expire_sweep(self) -> None:
@@ -357,9 +399,28 @@ class ContinuousEngine:
         # continue the decode exactly where preemption cut it.
         seq = req.sequence()
         S = len(seq)
+        chunk = self.scfg.prefill_chunk
+        if chunk is not None and S > chunk:
+            # Chunked prefill: occupy the slot now and feed the prompt in
+            # ``chunk``-sized pieces interleaved with decode steps
+            # (``_prefill_chunks``) — running slots' TPOT is bounded by
+            # one chunk's cost, not this whole prompt's.  Resumed
+            # requests restart from 0 (recompute-on-resume, same as the
+            # solo path).
+            req.state = RequestState.RUNNING
+            req.slot = slot
+            req.prefill_pos = 0
+            self.slots[slot] = req
+            self._prefilling[slot] = True
+            self._cache_len[slot] = 0
+            self._last_tok[slot] = 0
+            return
         width = min(_next_pow2(max(S, self.kv.block_size)),
                     -(-self.scfg.max_len // self.kv.block_size)
                     * self.kv.block_size)
+        if self._has_decodable():
+            self.max_prefill_stall_tokens = max(
+                self.max_prefill_stall_tokens, width)
         pad = width - S
         tokens = np.zeros((1, width), np.int32)
         tokens[0, pad:] = seq
@@ -374,12 +435,68 @@ class ContinuousEngine:
         req.tokens.append(tok)
         if req.t_first_token is None:
             req.t_first_token = self._now()
+            req.step_first_token = self._step
         self.kv.pack_prefill(out["cache"], req.blocks,
                              prompt_len=S, pad=pad)
         self.slots[slot] = req
         self._cache_len[slot] = S
         self._last_tok[slot] = tok
         self._retire_if_done(req)   # max_new_tokens=1 / instant EOS
+
+    def _prefill_chunks(self) -> None:
+        """Advance every mid-prefill slot by one chunk.
+
+        Chunks ride the paged S > 1 ``decode_step`` path: the chunk's KV
+        scatters straight into the request's blocks (no ``pack_prefill``),
+        right-padded to a pow2 width.  Junk positions sit beyond every
+        real token, so the causal mask never attends them, and the table
+        is sized to cover the padded width — writes past the row's own
+        blocks route to scratch block 0.  The final chunk samples the
+        first new token from the last *real* position, exactly where the
+        solo prefill samples, so greedy streams are unchanged."""
+        chunk = self.scfg.prefill_chunk
+        bs = self.kv.block_size
+        for slot in np.flatnonzero(self._prefilling):
+            slot = int(slot)
+            req = self.slots[slot]
+            seq = req.sequence()
+            s0 = req.prefill_pos
+            clen = min(chunk, len(seq) - s0)
+            width = _next_pow2(clen)
+            if self._has_decodable():
+                self.max_prefill_stall_tokens = max(
+                    self.max_prefill_stall_tokens, width)
+            tokens = np.zeros((1, width), np.int32)
+            tokens[0, :clen] = seq[s0:s0 + clen]
+            nb = _next_pow2((s0 + width - 1) // bs + 1)
+            table = np.zeros((1, nb), np.int32)   # pad → scratch block 0
+            table[0, :len(req.blocks[:nb])] = req.blocks[:nb]
+            table = jnp.asarray(table)
+            logits, self.kv.pool = self._chunk_fn(width, nb)(
+                self.params, self.kv.pool, {
+                    "tokens": jnp.asarray(tokens),
+                    "cache_len": jnp.asarray([s0], jnp.int32),
+                    "block_table": table,
+                })
+            self.counters["prefill_chunks"] += 1
+            req.prefill_pos = s0 + clen
+            self._cache_len[slot] = req.prefill_pos
+            if req.prefill_pos < len(seq):
+                continue
+            # Final chunk: sample the first new token; the slot joins the
+            # decodable set from the next _decode_once on.
+            self._key, sub = jax.random.split(self._key)
+            tok = int(np.asarray(self._sample(logits[:, clen - 1:clen],
+                                              sub))[0])
+            self._prefilling[slot] = False
+            req.prefill_pos = 0
+            req.tokens.append(tok)
+            if req.t_first_token is None:
+                req.t_first_token = self._now()
+                req.step_first_token = self._step
+            self._cache_len[slot] = len(seq)
+            self._last_tok[slot] = tok
+            self._retire_if_done(req)
 
     # ------------------------------------------------------------------
     # preemption under pool pressure (slots leave involuntarily)
@@ -397,7 +514,9 @@ class ContinuousEngine:
             self.slots[req.slot] = None
             self._cache_len[req.slot] = 0
             self._last_tok[req.slot] = 0
+            self._prefilling[req.slot] = False
             req.slot = None
+        req.prefill_pos = 0          # chunked prefill restarts on resume
         req.state = RequestState.PREEMPTED
         self.queue.appendleft(req)
 
@@ -438,21 +557,31 @@ class ContinuousEngine:
 
     def _decode_once(self) -> None:
         self._grow_blocks()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        # Mid-prefill slots are occupied but not decodable: their table
+        # rows stay empty (scratch) and cache_len is masked to 0, so the
+        # batched step writes their junk token to scratch block 0.
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and not self._prefilling[i]]
         if not active:
             return
         nb_need = max(int(self._cache_len[i]) // self.kv.block_size + 1
                       for i in active)
         nb = min(_next_pow2(nb_need), self.kv.blocks_per_seq)
+        decodable = np.array([r is not None and not self._prefilling[i]
+                              for i, r in enumerate(self.slots)])
         table = self.kv.table_array(
-            [r.blocks[:nb] if r is not None else [] for r in self.slots], nb)
+            [r.blocks[:nb] if decodable[i] else []
+             for i, r in enumerate(self.slots)], nb)
         batch = {
             "tokens": jnp.asarray(self._last_tok[:, None]),
             "cache_len": jnp.asarray(
-                np.where([r is not None for r in self.slots],
-                         self._cache_len, 0).astype(np.int32)),
+                np.where(decodable, self._cache_len, 0).astype(np.int32)),
             "block_table": table,
         }
+        per_block = self.kv.bytes / self.kv.n_blocks
+        self.kv_gathered_bytes += len(self.slots) * nb * per_block
+        self.kv_touched_bytes += per_block * sum(
+            int(self._cache_len[i]) // self.kv.block_size + 1 for i in active)
         logits, self.kv.pool = self._decode_fn(nb)(
             self.params, self.kv.pool, batch)
         self._key, sub = jax.random.split(self._key)
@@ -498,7 +627,20 @@ class ContinuousEngine:
             self._skew_s += float(self.faults.fire("slow"))
         self._expire_sweep()
         self._admissions()
+        self._prefill_chunks()
+        decodable_before = self._has_decodable()
+        before = self.decode_steps
         self._decode_once()
+        if (decodable_before and self.decode_steps == before
+                and self._has_decodable()):
+            # A decodable slot existed, survived the step, and still no
+            # decode ran — a genuine stall (0 by construction: chunked
+            # prefill interleaves with decode instead of displacing it).
+            self._stall_run += 1
+            self.max_decode_stall_steps = max(self.max_decode_stall_steps,
+                                              self._stall_run)
+        else:
+            self._stall_run = 0
         if self.failover is not None:
             self.counters["failovers"] = self.failover.health.failovers
             if self.failover.degraded:
@@ -539,6 +681,10 @@ class ContinuousEngine:
             "kv_bytes": self.kv.bytes,
             "kv_dense_bytes": self.kv.dense_bytes,
             "block_size": self.kv.block_size,
+            "max_decode_stall_steps": self.max_decode_stall_steps,
+            "max_prefill_stall_tokens": self.max_prefill_stall_tokens,
+            "kv_gathered_bytes": self.kv_gathered_bytes,
+            "kv_touched_bytes": self.kv_touched_bytes,
             **self.counters,
         }
         if self.failover is not None:

@@ -12,7 +12,11 @@ point every table entry (and their single-token write) at it.
 The block size is not hard-coded — it is resolved through the kernel
 autotuner's ``serve_kv`` tiling model, so it is roofline-ranked for the
 configured device and memoised in the device-fingerprint-keyed
-``TuningCache`` like any kernel block size.
+``TuningCache`` like any kernel block size.  That model prices each
+candidate through the ``paged_decode`` kernel's own cost model (joint
+resolution), and the kernel's ``block_kv`` candidates divide the pool
+block size by construction — the two tuners cannot disagree on
+blocking.
 
 Prefill packing: prompts prefill through the ordinary dense path (at a
 bucketed length, left-padded), then ``pack_prefill`` rolls the padding
@@ -43,7 +47,7 @@ def resolve_block_size(cfg: ArchConfig, *, n_slots: int, max_len: int,
     assert cache hits); otherwise it goes through the best-effort
     process-default path and falls back to the model's default config."""
     shape = shape_key(n_slots, max_len, cfg.n_kv_heads, cfg.head_dim_,
-                      T.DTYPE)
+                      T.DTYPE, n_heads=cfg.n_heads)
     if tuner is not None:
         config = tuner.tune("serve_kv", shape)
     else:

@@ -64,6 +64,7 @@ class Request:
     refusal: "object | None" = None                   # PlacementRefused
     expiry: str | None = None                         # why EXPIRED, if it did
     admit_seq: int | None = None        # first-admission order (preempt age)
+    prefill_pos: int = 0                # tokens prefilled so far (chunked)
     preemptions: int = 0                # times evicted under pool pressure
     defer_retries: int = 0              # DEFER backoff attempts so far
     retry_at_step: int = 0              # engine step before which not re-priced
@@ -72,6 +73,10 @@ class Request:
     t_arrival: float = field(default_factory=time.perf_counter)
     t_first_token: float | None = None
     t_finished: float | None = None
+    # engine-step marks — the deterministic (noise-free) TTFT the serve
+    # bench gates on: step_first_token - step_submitted
+    step_submitted: int | None = None
+    step_first_token: int | None = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

@@ -29,6 +29,7 @@ from repro.kernels.conv_mm.ref import conv_ref
 from repro.kernels.flash_attention import tiling as flash_tiling
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.paged_decode import tiling as pd_tiling
 from repro.kernels.ssm_scan import tiling as ssm_tiling
 from repro.kernels.ssm_scan.ops import ssd
 from repro.kernels.ssm_scan.ref import ssd_ref
@@ -40,6 +41,7 @@ CONV_SHAPE = conv_tiling.shape_key(
 FLASH_SHAPE = flash_tiling.shape_key(
     (1, 4, 512, 64), (1, 2, 512, 64), causal=True, dtype="bfloat16")
 SSM_SHAPE = ssm_tiling.shape_key((1, 256, 4, 32), 32, dtype="float32")
+PD_SHAPE = pd_tiling.shape_key(4, 8, 2, 64, 8, 32, dtype="bfloat16")
 
 
 @pytest.fixture
@@ -76,13 +78,14 @@ def test_largest_dividing_block():
 
 def test_all_kernels_register_tilings():
     assert list_tilings() == ["conv_mm", "flash_attention", "moe_dispatch",
-                              "serve_kv", "ssm_scan"]
+                              "paged_decode", "serve_kv", "ssm_scan"]
 
 
 @pytest.mark.parametrize("kernel,shape", [
     ("conv_mm", CONV_SHAPE),
     ("flash_attention", FLASH_SHAPE),
     ("ssm_scan", SSM_SHAPE),
+    ("paged_decode", PD_SHAPE),
 ])
 def test_default_config_is_a_candidate(kernel, shape):
     tiling = get_tiling(kernel)
